@@ -1,0 +1,61 @@
+"""Paper Fig 6a/6b (GCN/SAGE accuracy on Arxiv, Inner vs Repli) and Table 2
+(SAGE ROC-AUC on the dense Proteins graph, Inner only)."""
+from __future__ import annotations
+
+from .common import arxiv_like, emit, proteins_like
+
+
+def _run_one(ds, method, k, scheme, model, epochs, seed=0):
+    from repro.core import PARTITIONERS, build_partition_batch
+    from repro.gnn import GNNConfig, train_classifier, train_local
+    labels = PARTITIONERS[method](ds.graph, k, seed=seed)
+    batch = build_partition_batch(ds.graph, labels, scheme=scheme)
+    cfg = GNNConfig(kind=model, feature_dim=ds.features.shape[1],
+                    hidden_dim=128, embed_dim=128, num_layers=3, dropout=0.3)
+    _, emb = train_local(ds, batch, cfg, epochs=epochs, lr=5e-3, seed=seed)
+    return train_classifier(ds, emb, epochs=120, seed=seed)
+
+
+def centralized_reference(ds, model, epochs, seed=0):
+    import numpy as np
+    from repro.core import build_partition_batch
+    from repro.gnn import GNNConfig, train_classifier, train_local
+    labels = np.zeros(ds.graph.n, dtype=np.int64)
+    batch = build_partition_batch(ds.graph, labels, scheme="inner")
+    cfg = GNNConfig(kind=model, feature_dim=ds.features.shape[1],
+                    hidden_dim=128, embed_dim=128, num_layers=3, dropout=0.3)
+    _, emb = train_local(ds, batch, cfg, epochs=epochs, lr=5e-3, seed=seed)
+    return train_classifier(ds, emb, epochs=120, seed=seed)
+
+
+def run(fast: bool = True, dataset: str = "arxiv_like"):
+    ds = arxiv_like() if dataset == "arxiv_like" else proteins_like()
+    epochs = 40 if fast else 80
+    models = ("gcn",) if fast else ("gcn", "sage")
+    if dataset == "proteins_like":
+        models = ("sage",)                      # paper Table 2
+        schemes = ("inner",)                    # Repli too dense (paper §5.2)
+    else:
+        schemes = ("inner", "repli")
+    ks = (2, 8, 16) if fast else (2, 4, 8, 16)
+    methods = ("lpa", "metis", "leiden_fusion")
+    rows = []
+    for model in models:
+        ref = centralized_reference(ds, model, epochs)
+        rows.append({"dataset": ds.name, "model": model,
+                     "method": "centralized", "k": 1, "scheme": "-",
+                     "test": ref["test"], "val": ref["val"]})
+        for k in ks:
+            for method in methods:
+                for scheme in schemes:
+                    res = _run_one(ds, method, k, scheme, model, epochs)
+                    rows.append({"dataset": ds.name, "model": model,
+                                 "method": method, "k": k, "scheme": scheme,
+                                 "test": res["test"], "val": res["val"]})
+    emit(f"fig6_accuracy_{dataset}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)
+    run(fast=False, dataset="proteins_like")

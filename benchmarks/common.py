@@ -1,0 +1,59 @@
+"""Shared helpers for the benchmark modules."""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def emit(table: str, rows: List[Dict], keys: List[str] | None = None) -> None:
+    """Print a named CSV block (also saved under artifacts/<table>.csv)."""
+    if not rows:
+        print(f"# {table}: EMPTY")
+        return
+    keys = keys or list(rows[0].keys())
+    lines = [",".join(keys)]
+    for r in rows:
+        lines.append(",".join(_fmt(r.get(k)) for k in keys))
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"{table}.csv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# --- {table} ---")
+    for ln in lines:
+        print(ln)
+    sys.stdout.flush()
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+@functools.lru_cache(maxsize=4)
+def arxiv_like(n: int = 8000, seed: int = 0):
+    from repro.core import make_arxiv_like
+    return make_arxiv_like(n=n, seed=seed)
+
+
+@functools.lru_cache(maxsize=4)
+def proteins_like(n: int = 3000, seed: int = 1):
+    from repro.core import make_proteins_like
+    return make_proteins_like(n=n, seed=seed)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

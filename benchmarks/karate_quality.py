@@ -1,0 +1,28 @@
+"""Paper Table 1 + Fig 3: partition quality of LPA/METIS/Random/LF on the
+Zachary karate club, k=2 (isolated nodes, components, edge cuts)."""
+from __future__ import annotations
+
+from .common import emit
+
+
+def run(fast: bool = True):
+    from repro.core import (PARTITIONERS, evaluate_partition, karate_club)
+    g = karate_club()
+    rows = []
+    for name in ("lpa", "metis", "random", "leiden_fusion"):
+        labels = PARTITIONERS[name](g, 2, seed=0)
+        rep = evaluate_partition(g, labels)
+        rows.append({
+            "method": name,
+            "isolated_p0": rep.isolated_per_part[0],
+            "isolated_p1": rep.isolated_per_part[1],
+            "components_p0": rep.components_per_part[0],
+            "components_p1": rep.components_per_part[1],
+            "edge_cuts": int(round(rep.edge_cut_pct / 100 * g.m)),
+        })
+    emit("table1_karate", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

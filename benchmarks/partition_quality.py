@@ -1,0 +1,28 @@
+"""Paper Fig 4 (arxiv) + Fig 5 (proteins): subgraph quality metrics vs k for
+each partitioning method — edge-cut %, components, isolated nodes, node/edge
+balance, replication factor."""
+from __future__ import annotations
+
+from .common import arxiv_like, emit, proteins_like, timer
+
+
+def run(fast: bool = True, dataset: str = "arxiv_like"):
+    from repro.core import PARTITIONERS, evaluate_partition
+    ds = arxiv_like() if dataset == "arxiv_like" else proteins_like()
+    ks = (2, 8, 16) if fast else (2, 4, 8, 16)
+    methods = ("lpa", "metis", "random", "leiden_fusion")
+    rows = []
+    for k in ks:
+        for m in methods:
+            with timer() as t:
+                labels = PARTITIONERS[m](ds.graph, k, seed=0)
+            rep = evaluate_partition(ds.graph, labels)
+            rows.append({"dataset": ds.name, "k": k, "method": m,
+                         **rep.as_dict(), "partition_time_s": t.s})
+    emit(f"fig4_quality_{dataset}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(fast=False)
+    run(fast=False, dataset="proteins_like")

@@ -1,0 +1,107 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts (fills the
+<!--...--> placeholders)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from .roofline import DRYRUN_DIR, load_records
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def _f(x, digits=3):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}g}"
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant "
+            "| useful frac | peak GB | fits 16GB |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(load_records(mesh="pod16x16"),
+                    key=lambda r: (r.get("arch", ""), r.get("shape", ""))):
+        if "workload" in r:
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                        f"{r.get('error','')[:40]} | | | | | | |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory") or {}
+        peak = (mem.get("peak_bytes") or 0) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_f(t['compute_s'])} | "
+            f"{_f(t['memory_s'])} | {_f(t['collective_s'])} | "
+            f"{t['dominant']} | {_f(r.get('useful_flops_frac'))} | "
+            f"{peak:.1f} | {'✅' if peak and peak < 16 else '❌'} |")
+    return "\n".join(rows)
+
+
+def dryrun_matrix() -> str:
+    recs = load_records()
+    ok = {}
+    for r in recs:
+        if "workload" in r:
+            continue
+        ok[(r["arch"], r["shape"], r["mesh"])] = r.get("ok", False)
+    archs = sorted({k[0] for k in ok})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    rows = ["| arch | " + " | ".join(shapes) + " |",
+            "|---|" + "---|" * len(shapes)]
+    for a in archs:
+        cells = []
+        for s in shapes:
+            c1 = ok.get((a, s, "pod16x16"))
+            c2 = ok.get((a, s, "pod2x16x16"))
+            mark = lambda v: "✅" if v else ("❌" if v is False else "·")
+            cells.append(f"{mark(c1)}/{mark(c2)}")
+        rows.append(f"| {a} | " + " | ".join(cells) + " |")
+    rows.append("")
+    rows.append("(cell = single-pod / multi-pod compile)")
+    return "\n".join(rows)
+
+
+def gnn_summary() -> str:
+    out = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        path = os.path.join(DRYRUN_DIR, f"gnn_lf__{mesh}.json")
+        if not os.path.exists(path):
+            continue
+        r = json.load(open(path))
+        line = (f"- **{mesh}** ({r['k_partitions']} partitions, 1/chip): "
+                f"LF local step collectives = "
+                f"**{r['collectives']['total']} bytes** "
+                f"(zero_collectives={r['zero_collectives']})")
+        if "sync_baseline_collectives" in r:
+            sb = r["sync_baseline_collectives"]["total"]
+            line += (f"; synchronized halo baseline = {sb/1e9:.2f} GB/step "
+                     f"all-gather traffic per device (p2p lower bound "
+                     f"{r.get('halo_p2p_bytes_analytic', 0)/1e6:.1f} MB/step "
+                     f"global) — the traffic LF eliminates")
+        out.append(line)
+    return "\n".join(out)
+
+
+def fill(marker: str, content: str, text: str) -> str:
+    return text.replace(f"<!--{marker}-->", content)
+
+
+def main():
+    with open(EXPERIMENTS) as f:
+        text = f.read()
+    text = fill("ROOFLINE_TABLE", roofline_table(), text)
+    text = fill("DRYRUN_MATRIX", dryrun_matrix(), text)
+    text = fill("GNN_DRYRUN", "\n" + gnn_summary(), text)
+    with open(EXPERIMENTS, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md tables rendered")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
+roofline table (single-pod baseline) + the multi-pod compile matrix."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import ARTIFACTS, emit
+
+DRYRUN_DIR = os.path.join(ARTIFACTS, "dryrun")
+
+
+def load_records(mesh: str | None = None, mode: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if mode and r.get("mode") != mode:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(fast: bool = True):
+    rows = []
+    for r in load_records(mesh="pod16x16"):
+        if "workload" in r:
+            continue
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mode": r["mode"], "ok": False,
+                         "error": r.get("error", "")[:60]})
+            continue
+        t = r["roofline"]
+        mem = r.get("memory") or {}
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mode": r["mode"],
+            "ok": True,
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "model_flops": r.get("model_flops"),
+            "useful_frac": r.get("useful_flops_frac"),
+            "peak_gb": (mem.get("peak_bytes") or 0) / 1e9,
+            "fits_16gb": ((mem.get("peak_bytes") or 0) < 16e9),
+        })
+    emit("roofline_single_pod", rows)
+
+    matrix = []
+    for r in load_records(mesh="pod2x16x16"):
+        if "workload" in r:
+            continue
+        matrix.append({"arch": r["arch"], "shape": r["shape"],
+                       "mode": r["mode"], "ok": r.get("ok", False),
+                       "error": (r.get("error") or "")[:60]})
+    emit("multipod_compile_matrix", matrix)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run           # fast grid (CI)
+    PYTHONPATH=src python -m benchmarks.run --full    # paper-size grid
+
+Each module prints a named CSV block and stores it under
+benchmarks/artifacts/. The roofline module additionally requires the dry-run
+artifacts (python -m repro.launch.dryrun --all --both-meshes)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from . import (accuracy, fusion_ablation, karate_quality,
+                   partition_quality, partition_time, roofline,
+                   training_time)
+    modules = {
+        "karate_quality": lambda: karate_quality.run(fast),
+        "partition_quality": lambda: partition_quality.run(fast),
+        "partition_quality_dense": lambda: partition_quality.run(
+            fast, dataset="proteins_like"),
+        "partition_time": lambda: partition_time.run(fast),
+        "accuracy": lambda: accuracy.run(fast),
+        "accuracy_dense": lambda: accuracy.run(fast,
+                                               dataset="proteins_like"),
+        "training_time": lambda: training_time.run(fast),
+        "fusion_ablation": lambda: fusion_ablation.run(fast),
+        "roofline": lambda: roofline.run(fast),
+    }
+    chosen = (args.only.split(",") if args.only else list(modules))
+    t0 = time.time()
+    failures = []
+    for name in chosen:
+        print(f"\n==== {name} ====", flush=True)
+        t1 = time.time()
+        try:
+            modules[name]()
+        except Exception as e:                                # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"# FAILED {name}: {e!r}", flush=True)
+        print(f"# {name}: {time.time() - t1:.1f}s", flush=True)
+    print(f"\n# total: {time.time() - t0:.1f}s; failures: {failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""End-to-end driver (paper pipeline at benchmark scale).
+
+Reproduces the paper's core experiment: the same GNN trained on partitions
+from different partitioning methods, Inner vs Repli, versus the centralized
+reference — showing LF preserves accuracy while training fully locally.
+
+    PYTHONPATH=src python examples/distributed_gnn_training.py --k 8
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import (PARTITIONERS, build_partition_batch,
+                        evaluate_partition, make_arxiv_like)
+from repro.gnn import GNNConfig, train_classifier, train_local
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=8000)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--epochs", type=int, default=50)
+    ap.add_argument("--model", choices=["gcn", "sage"], default="gcn")
+    args = ap.parse_args()
+
+    ds = make_arxiv_like(n=args.nodes)
+    cfg = GNNConfig(kind=args.model, feature_dim=ds.features.shape[1],
+                    hidden_dim=128, embed_dim=128, num_layers=3, dropout=0.3)
+
+    # centralized reference (k=1)
+    ref_batch = build_partition_batch(
+        ds.graph, np.zeros(ds.graph.n, dtype=np.int64), scheme="inner")
+    _, ref_emb = train_local(ds, ref_batch, cfg, epochs=args.epochs, lr=5e-3)
+    ref = train_classifier(ds, ref_emb, epochs=120)
+    print(f"centralized: test={ref['test']:.3f}")
+
+    for method in ("leiden_fusion", "metis", "lpa", "random"):
+        labels = PARTITIONERS[method](ds.graph, args.k, seed=0)
+        rep = evaluate_partition(ds.graph, labels)
+        for scheme in ("inner", "repli"):
+            batch = build_partition_batch(ds.graph, labels, scheme=scheme)
+            t0 = time.time()
+            _, emb = train_local(ds, batch, cfg, epochs=args.epochs, lr=5e-3)
+            res = train_classifier(ds, emb, epochs=120)
+            print(f"{method:14s} k={args.k} {scheme:5s}: "
+                  f"test={res['test']:.3f} "
+                  f"(cut={rep.edge_cut_pct:.1f}% "
+                  f"comps={rep.total_components} "
+                  f"iso={rep.total_isolated}, {time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: Leiden-Fusion in 30 seconds.
+
+Partitions the Zachary karate club and a synthetic citation graph, prints
+the paper's quality metrics, then runs the full local-training pipeline on a
+small graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (build_partition_batch, evaluate_partition,
+                        karate_club, leiden_fusion, make_arxiv_like,
+                        metis_partition)
+from repro.gnn import GNNConfig, train_classifier, train_local
+
+
+def main():
+    # --- 1. the paper's Figure 2: karate club, k=2 -------------------------
+    g = karate_club()
+    labels = leiden_fusion(g, k=2)
+    rep = evaluate_partition(g, labels)
+    print("karate k=2:", rep.as_dict())
+    assert rep.max_components == 1 and rep.total_isolated == 0
+
+    # --- 2. a real(ish) graph: LF vs METIS quality -------------------------
+    ds = make_arxiv_like(n=3000, feature_dim=64, seed=0)
+    for name, fn in (("leiden_fusion", leiden_fusion),
+                     ("metis", metis_partition)):
+        rep = evaluate_partition(ds.graph, fn(ds.graph, 8))
+        print(f"{name:14s} k=8: cut={rep.edge_cut_pct:5.1f}% "
+              f"components={rep.total_components:3d} "
+              f"isolated={rep.total_isolated}")
+
+    # --- 3. the paper's pipeline: partition -> local GNNs -> classifier ----
+    labels = leiden_fusion(ds.graph, 4)
+    batch = build_partition_batch(ds.graph, labels, scheme="repli")
+    cfg = GNNConfig(kind="gcn", feature_dim=64, hidden_dim=64, embed_dim=64,
+                    num_layers=3, dropout=0.3)
+    _, embeddings = train_local(ds, batch, cfg, epochs=30, lr=5e-3)
+    res = train_classifier(ds, embeddings, epochs=100)
+    print(f"LF k=4 Repli: test accuracy {res['test']:.3f} "
+          f"(trained with ZERO inter-partition communication)")
+
+
+if __name__ == "__main__":
+    main()

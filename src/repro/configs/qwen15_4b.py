@@ -1,0 +1,18 @@
+"""qwen1.5-4b [dense] — QKV bias, MHA.
+
+40L d_model=2560, 20 heads (kv=20), d_ff=6912, vocab=151936.
+[hf:Qwen/Qwen1.5-0.5B family, 4B point]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    ffn_activation="swiglu",
+)

@@ -1,0 +1,171 @@
+"""Subgraph assembly for distributed local training.
+
+Builds, for every partition, the *Inner* (cut edges dropped) or *Repli*
+(1-hop boundary replicas, frozen halo) training subgraph, padded to uniform
+static shapes so k subgraphs can be stacked on the ``data`` mesh axis and fed
+through one `shard_map`ped train step.
+
+Conventions of the padded CSR batch (`PartitionBatch`):
+  - nodes  [k, N_pad]  original node ids, -1 for padding
+  - edges are destination-sorted arc lists (src_local, dst_local) so the
+    aggregation kernel can stream edge blocks; padding arcs point at a
+    dedicated sink row (N_pad-1 reserved? no — padding arcs carry weight 0
+    and src=dst=0; they contribute zeros because features are masked).
+  - owned mask: True for nodes the partition *owns* (loss + embedding rows);
+    halo replicas are present in Repli batches with owned=False.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionBatch:
+    """Static-shape batch of k partition subgraphs (numpy; fed to JAX)."""
+    node_ids: np.ndarray      # [k, N_pad] int32, -1 = padding
+    node_mask: np.ndarray     # [k, N_pad] bool, valid node
+    owned_mask: np.ndarray    # [k, N_pad] bool, owned (not halo) node
+    edge_src: np.ndarray      # [k, E_pad] int32 local src (gather index)
+    edge_dst: np.ndarray      # [k, E_pad] int32 local dst (segment id), sorted
+    edge_weight: np.ndarray   # [k, E_pad] f32, 0 for padding
+    in_degree: np.ndarray     # [k, N_pad] f32 (for GCN mean normalization)
+    n_pad: int
+    e_pad: int
+
+    @property
+    def k(self) -> int:
+        return int(self.node_ids.shape[0])
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def build_partition_batch(g: Graph, labels: np.ndarray, scheme: str = "inner",
+                          pad_nodes_to: Optional[int] = None,
+                          pad_edges_to: Optional[int] = None,
+                          align: int = 8) -> PartitionBatch:
+    """Assemble the k padded subgraphs for ``scheme`` in {'inner','repli'}."""
+    assert scheme in ("inner", "repli"), scheme
+    labels = np.asarray(labels, dtype=np.int64)
+    k = int(labels.max()) + 1
+    src, dst, w = g.arcs()          # every directed arc (u -> v)
+
+    node_lists: List[np.ndarray] = []
+    owned_lists: List[np.ndarray] = []
+    arc_lists: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+
+    for p in range(k):
+        owned = np.where(labels == p)[0]
+        owned_set = np.zeros(g.n, dtype=bool)
+        owned_set[owned] = True
+        if scheme == "inner":
+            keep = owned_set[src] & owned_set[dst]
+            nodes = owned
+            owned_flags = np.ones(nodes.shape[0], dtype=bool)
+        else:
+            # Repli: owned nodes + 1-hop halo; keep every arc whose *dst* is
+            # owned (halo feeds owned nodes) plus owned->owned arcs. Arcs into
+            # halo nodes are dropped — halo features are frozen inputs.
+            keep = owned_set[dst]
+            halo = np.unique(src[keep & ~owned_set[src]])
+            nodes = np.concatenate([owned, halo])
+            owned_flags = np.concatenate([
+                np.ones(owned.shape[0], dtype=bool),
+                np.zeros(halo.shape[0], dtype=bool)])
+        remap = np.full(g.n, -1, dtype=np.int64)
+        remap[nodes] = np.arange(nodes.shape[0])
+        ls, ld, lw = remap[src[keep]], remap[dst[keep]], w[keep]
+        # destination-sorted for segment-sum friendliness
+        order = np.argsort(ld, kind="stable")
+        arc_lists.append((ls[order], ld[order], lw[order]))
+        node_lists.append(nodes)
+        owned_lists.append(owned_flags)
+
+    n_max = max(x.shape[0] for x in node_lists)
+    e_max = max(x[0].shape[0] for x in arc_lists) if arc_lists else 1
+    n_pad = pad_nodes_to or _round_up(max(n_max, 1), align)
+    e_pad = pad_edges_to or _round_up(max(e_max, 1), align)
+    if n_max > n_pad or e_max > e_pad:
+        raise ValueError(f"padding too small: need nodes>={n_max} edges>={e_max}")
+
+    node_ids = np.full((k, n_pad), -1, dtype=np.int32)
+    node_mask = np.zeros((k, n_pad), dtype=bool)
+    owned_mask = np.zeros((k, n_pad), dtype=bool)
+    edge_src = np.zeros((k, e_pad), dtype=np.int32)
+    edge_dst = np.full((k, e_pad), n_pad - 1, dtype=np.int32)  # park padding
+    edge_weight = np.zeros((k, e_pad), dtype=np.float32)
+    in_degree = np.zeros((k, n_pad), dtype=np.float32)
+
+    for p in range(k):
+        nodes, owned_flags = node_lists[p], owned_lists[p]
+        ls, ld, lw = arc_lists[p]
+        nn, ne = nodes.shape[0], ls.shape[0]
+        node_ids[p, :nn] = nodes
+        node_mask[p, :nn] = True
+        owned_mask[p, :nn] = owned_flags
+        edge_src[p, :ne] = ls
+        edge_dst[p, :ne] = ld
+        edge_weight[p, :ne] = lw
+        np.add.at(in_degree[p], ld, 1.0)
+
+    return PartitionBatch(node_ids=node_ids, node_mask=node_mask,
+                          owned_mask=owned_mask, edge_src=edge_src,
+                          edge_dst=edge_dst, edge_weight=edge_weight,
+                          in_degree=in_degree, n_pad=n_pad, e_pad=e_pad)
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloExchangeSpec:
+    """Communication plan for the *synchronized* baseline (per layer).
+
+    For every partition p: which local rows must be fetched from which peer.
+    Encoded densely for SPMD: for each p, a [H_pad] list of (peer, peer_local
+    row) plus the local halo row it lands in. This is exactly the traffic LF
+    eliminates — the roofline collective term of the sync baseline reads it.
+    """
+    send_rows: np.ndarray   # [k, k, H_pad] int32: rows p sends to q (local idx in p), -1 pad
+    recv_rows: np.ndarray   # [k, k, H_pad] int32: halo rows in p filled from q, -1 pad
+    h_pad: int
+
+
+def build_halo_exchange(g: Graph, labels: np.ndarray,
+                        batch: PartitionBatch) -> HaloExchangeSpec:
+    """Plan per-pair halo transfers for the synchronized baseline (Repli batch)."""
+    labels = np.asarray(labels, dtype=np.int64)
+    k = batch.k
+    # map original node id -> local row per partition
+    local_row = {}
+    for p in range(k):
+        ids = batch.node_ids[p]
+        for r, nid in enumerate(ids):
+            if nid >= 0:
+                local_row[(p, int(nid))] = r
+    sends: dict = {(p, q): [] for p in range(k) for q in range(k)}
+    recvs: dict = {(p, q): [] for p in range(k) for q in range(k)}
+    for p in range(k):
+        ids = batch.node_ids[p]
+        owned = batch.owned_mask[p]
+        valid = batch.node_mask[p]
+        for r in range(batch.n_pad):
+            if not valid[r] or owned[r]:
+                continue
+            nid = int(ids[r])
+            q = int(labels[nid])        # owner partition
+            sends[(q, p)].append(local_row[(q, nid)])
+            recvs[(p, q)].append(r)
+    h_max = max((len(v) for v in sends.values()), default=1)
+    h_pad = max(h_max, 1)
+    send_rows = np.full((k, k, h_pad), -1, dtype=np.int32)
+    recv_rows = np.full((k, k, h_pad), -1, dtype=np.int32)
+    for (p, q), rows in sends.items():
+        send_rows[p, q, :len(rows)] = rows
+    for (p, q), rows in recvs.items():
+        recv_rows[p, q, :len(rows)] = rows
+    return HaloExchangeSpec(send_rows=send_rows, recv_rows=recv_rows,
+                            h_pad=h_pad)

@@ -1,0 +1,126 @@
+"""Beyond-paper: Leiden-Fusion for MoE expert placement.
+
+The paper partitions a *data* graph to minimize training communication. The
+same algorithm transfers to expert-parallel MoE serving/training: build the
+**expert co-activation graph** (nodes = experts, edge weight = how often two
+experts are routed the same token by top-k), partition it with Leiden-Fusion
+into one community per model-parallel shard, and place co-activated experts
+on the same chip. Tokens whose top-k experts all live on one shard need no
+all-to-all hop for dispatch/combine — LF's minimal-edge-cut objective is
+exactly minimal cross-shard token traffic.
+
+``placement_cost`` scores a placement by the expected fraction of
+(token, expert) assignments that cross shards, so the LF placement can be
+compared against the default contiguous split — measured in
+EXPERIMENTS.md §Perf and examples/moe_expert_placement.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .fusion import fuse
+from .graph import Graph
+from .leiden import leiden
+
+
+def coactivation_graph(expert_idx: np.ndarray, num_experts: int,
+                       weights: Optional[np.ndarray] = None) -> Graph:
+    """Build the expert co-activation graph.
+
+    expert_idx: [T, K] — the top-k expert ids per token (from the router).
+    Edge (a, b) accumulates 1 for every token that routes to both a and b.
+    """
+    t, k = expert_idx.shape
+    srcs, dsts, ws = [], [], []
+    for i in range(k):
+        for j in range(i + 1, k):
+            srcs.append(expert_idx[:, i])
+            dsts.append(expert_idx[:, j])
+            ws.append(weights if weights is not None else np.ones(t))
+    return Graph.from_edges(num_experts, np.concatenate(srcs),
+                            np.concatenate(dsts), np.concatenate(ws))
+
+
+def lf_expert_placement(expert_idx: np.ndarray, num_experts: int,
+                        num_shards: int, alpha: float = 0.0,
+                        seed: int = 0) -> np.ndarray:
+    """Place experts on shards with Leiden-Fusion. Returns shard id per
+    expert, exactly balanced when num_experts % num_shards == 0 (required —
+    every shard must hold the same number of expert weight slots)."""
+    g = coactivation_graph(expert_idx, num_experts)
+    per = num_experts // num_shards
+    assert per * num_shards == num_experts, (num_experts, num_shards)
+    # strict balance: cap at per-shard slot count; LF fusion with tight alpha
+    labels = leiden(g, max_community_size=per, seed=seed)
+    shard = fuse(g, labels, num_shards, max_part_size=per + 0.5)
+    shard = _rebalance(g, shard, num_shards, per)
+    return shard
+
+
+def _rebalance(g: Graph, shard: np.ndarray, num_shards: int, per: int
+               ) -> np.ndarray:
+    """Move lowest-attachment experts out of overfull shards until exact."""
+    shard = shard.copy()
+    sizes = np.bincount(shard, minlength=num_shards)
+    src_, dst_, w_ = g.arcs()
+    while (sizes > per).any():
+        over = int(np.argmax(sizes))
+        under = int(np.argmin(sizes))
+        members = np.where(shard == over)[0]
+        # attachment of each member to its own shard
+        att = np.zeros(members.shape[0])
+        for m, e in enumerate(members):
+            nbrs = g.neighbors(int(e))
+            wts = g.neighbor_weights(int(e))
+            att[m] = wts[shard[nbrs] == over].sum()
+        mv = int(members[np.argmin(att)])
+        shard[mv] = under
+        sizes[over] -= 1
+        sizes[under] += 1
+    return shard
+
+
+def placement_cost(expert_idx: np.ndarray, placement: np.ndarray,
+                   token_shard: Optional[np.ndarray] = None) -> Dict[str, float]:
+    """Fraction of (token, expert) hops that cross shards.
+
+    Without token_shard, tokens are assumed uniformly spread over shards, so
+    an assignment to an expert on shard s costs (1 - 1/num_shards) ... the
+    comparable quantity between placements is the *pairwise dispersion*: the
+    mean number of DISTINCT shards a token's top-k set touches (fewer
+    distinct shards = fewer all-to-all partners = less traffic)."""
+    t, k = expert_idx.shape
+    shards_per_token = np.array(
+        [len(set(placement[expert_idx[i]])) for i in range(t)])
+    return {
+        "mean_shards_per_token": float(shards_per_token.mean()),
+        "p90_shards_per_token": float(np.percentile(shards_per_token, 90)),
+        "single_shard_frac": float((shards_per_token == 1).mean()),
+    }
+
+
+def contiguous_placement(num_experts: int, num_shards: int) -> np.ndarray:
+    """The default (expert id // per-shard) placement used by naive
+    expert-parallel sharding of a [E, ...] weight tensor."""
+    per = num_experts // num_shards
+    return np.arange(num_experts) // per
+
+
+def apply_placement_to_params(params_moe: dict, placement: np.ndarray
+                              ) -> Tuple[dict, np.ndarray]:
+    """Reorder the expert axis of the MoE weight stacks so that shard s holds
+    experts with placement == s contiguously (then the standard P("model")
+    sharding of the E axis realizes the LF placement). Returns (params, perm)
+    where perm maps new position -> old expert id; the router output must be
+    remapped with argsort(perm)."""
+    perm = np.argsort(placement, kind="stable")
+    out = dict(params_moe)
+    for name in ("w_gate", "w_up", "w_out"):
+        if name in out:
+            out[name] = out[name][..., perm, :, :] \
+                if out[name].ndim == 4 else out[name][perm]
+    if "router" in out:
+        out["router"] = out["router"][..., perm]
+    return out, perm

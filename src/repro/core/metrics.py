@@ -1,0 +1,86 @@
+"""Partition quality metrics — paper §5.1, equations (5)-(7)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from .graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionReport:
+    k: int
+    edge_cut_pct: float          # eq. (5), in percent of total edges
+    components_per_part: List[int]
+    isolated_per_part: List[int]
+    node_balance: float          # eq. (6)
+    edge_balance: float
+    replication_factor: float    # eq. (7), with 1-hop halos (Repli scheme)
+
+    @property
+    def total_components(self) -> int:
+        return int(sum(self.components_per_part))
+
+    @property
+    def total_isolated(self) -> int:
+        return int(sum(self.isolated_per_part))
+
+    @property
+    def max_components(self) -> int:
+        return int(max(self.components_per_part))
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "k": self.k,
+            "edge_cut_pct": self.edge_cut_pct,
+            "total_components": self.total_components,
+            "max_components": self.max_components,
+            "total_isolated": self.total_isolated,
+            "node_balance": self.node_balance,
+            "edge_balance": self.edge_balance,
+            "replication_factor": self.replication_factor,
+        }
+
+
+def evaluate_partition(g: Graph, labels: np.ndarray) -> PartitionReport:
+    labels = np.asarray(labels, dtype=np.int64)
+    k = int(labels.max()) + 1
+    src, dst, w = g.arcs()
+    once = src < dst                      # count each undirected edge once
+    s, d = src[once], dst[once]
+    m = s.shape[0]
+    cut_mask = labels[s] != labels[d]
+    edge_cut_pct = 100.0 * cut_mask.sum() / max(m, 1)
+
+    # per-partition structure
+    comps, isolated, nodes, edges = [], [], [], []
+    deg = np.zeros(g.n, dtype=np.int64)
+    same = ~cut_mask
+    np.add.at(deg, s[same], 1)
+    np.add.at(deg, d[same], 1)
+    for p in range(k):
+        mask = labels == p
+        nodes.append(int(mask.sum()))
+        edges.append(int((same & (labels[s] == p)).sum()))
+        comps.append(g.num_components(mask))
+        isolated.append(int(((deg == 0) & mask).sum()))
+
+    node_balance = max(nodes) / (g.n / k)
+    edge_balance = max(edges) / (max(sum(edges), 1) / k)
+
+    # replication factor with 1-hop halos: each partition stores its own
+    # nodes + boundary neighbors in other partitions
+    halo_pairs = set()
+    for a, b in zip(s[cut_mask], d[cut_mask]):
+        halo_pairs.add((int(labels[a]), int(b)))
+        halo_pairs.add((int(labels[b]), int(a)))
+    rf = (g.n + len(halo_pairs)) / g.n
+
+    return PartitionReport(k=k, edge_cut_pct=float(edge_cut_pct),
+                           components_per_part=comps,
+                           isolated_per_part=isolated,
+                           node_balance=float(node_balance),
+                           edge_balance=float(edge_balance),
+                           replication_factor=float(rf))

@@ -1,0 +1,253 @@
+"""Partitioning methods: Leiden-Fusion + the paper's baselines.
+
+- ``random_partition``  — uniform node assignment (paper §3.1).
+- ``lpa_partition``     — Label Propagation seeded with k labels, as used by
+  Spark Local [Duong et al. 2021] and reproduced in the paper.
+- ``metis_partition``   — a self-contained multilevel k-way partitioner in
+  the METIS family: heavy-edge-matching coarsening, greedy k-way initial
+  partition, Fiduccia–Mattheyses-style boundary refinement. (The original
+  METIS C library is not available offline; this reproduces its *behavioral
+  profile* — low edge cut, balanced sizes, but no connectivity guarantee —
+  which is exactly the property the paper contrasts against.)
+- ``with_fusion``       — the "+F" operator of paper §5.4: split every
+  partition into its connected components, then run community Fusion down
+  to k partitions.
+- ``leiden_fusion``     — re-exported from :mod:`repro.core.fusion`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from .fusion import fuse, leiden_fusion
+from .graph import Graph
+
+__all__ = ["random_partition", "lpa_partition", "metis_partition",
+           "leiden_fusion", "with_fusion", "get_partitioner", "PARTITIONERS"]
+
+
+def random_partition(g: Graph, k: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, k, g.n).astype(np.int64)
+
+
+def lpa_partition(g: Graph, k: int, seed: int = 0, max_iter: int = 50,
+                  balance_cap: float = 1.10) -> np.ndarray:
+    """Label propagation with k initial labels (partitioning variant).
+
+    Nodes start with a random label in [0, k); each sweep assigns every node
+    the (weighted) majority label of its neighbors, subject to a soft size
+    cap so partitions stay usable (Spinner-style). Sensitive to the seed by
+    construction — the paper calls this out as LPA's weakness.
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, k, g.n).astype(np.int64)
+    cap = balance_cap * g.n / k
+    counts = np.bincount(labels, minlength=k).astype(np.float64)
+    indptr, indices, ew = g.indptr, g.indices, g.edge_weight
+    for _ in range(max_iter):
+        moved = 0
+        order = rng.permutation(g.n)
+        for v in order:
+            v = int(v)
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            if nbrs.size == 0:
+                continue
+            w = ew[indptr[v]:indptr[v + 1]]
+            score = np.zeros(k)
+            np.add.at(score, labels[nbrs], w)
+            # soft cap: forbid overfull targets
+            cur = int(labels[v])
+            score[(counts >= cap)] = -np.inf
+            score[cur] = max(score[cur], 0.0) if counts[cur] < cap else score[cur]
+            new = int(np.argmax(score))
+            if score[new] == -np.inf:
+                new = cur
+            if new != cur and score[new] >= score[cur]:
+                labels[v] = new
+                counts[cur] -= 1
+                counts[new] += 1
+                moved += 1
+        if moved == 0:
+            break
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# METIS-like multilevel k-way partitioner
+# ---------------------------------------------------------------------------
+
+def _heavy_edge_matching(g: Graph, rng: np.random.Generator) -> np.ndarray:
+    """Greedy heavy-edge matching; returns coarse node id per node."""
+    match = np.full(g.n, -1, dtype=np.int64)
+    order = rng.permutation(g.n)
+    for v in order:
+        v = int(v)
+        if match[v] >= 0:
+            continue
+        nbrs = g.indices[g.indptr[v]:g.indptr[v + 1]]
+        ws = g.edge_weight[g.indptr[v]:g.indptr[v + 1]]
+        best, best_w = -1, -1.0
+        for u, w in zip(nbrs, ws):
+            u = int(u)
+            if match[u] < 0 and u != v and w > best_w:
+                best, best_w = u, w
+        if best >= 0:
+            match[v] = v
+            match[best] = v
+        else:
+            match[v] = v
+    # compact coarse ids
+    _, coarse = np.unique(match, return_inverse=True)
+    return coarse.astype(np.int64)
+
+
+def _bfs_order(g: Graph, nodes: np.ndarray, rng: np.random.Generator
+               ) -> np.ndarray:
+    """BFS ordering of ``nodes`` within their induced subgraph (all
+    components, restarting from an arbitrary unvisited node)."""
+    inset = np.zeros(g.n, dtype=bool)
+    inset[nodes] = True
+    seen = np.zeros(g.n, dtype=bool)
+    order: list[int] = []
+    for seed in rng.permutation(nodes):
+        seed = int(seed)
+        if seen[seed]:
+            continue
+        seen[seed] = True
+        queue = [seed]
+        head = 0
+        while head < len(queue):
+            v = queue[head]; head += 1
+            order.append(v)
+            for u in g.neighbors(v):
+                u = int(u)
+                if inset[u] and not seen[u]:
+                    seen[u] = True
+                    queue.append(u)
+    return np.array(order, dtype=np.int64)
+
+
+def _greedy_growth_partition(g: Graph, k: int, rng: np.random.Generator
+                             ) -> np.ndarray:
+    """Initial k-way partition by recursive BFS bisection (balanced by
+    node weight; BFS prefixes keep the halves mostly contiguous)."""
+    labels = np.zeros(g.n, dtype=np.int64)
+
+    def split(nodes: np.ndarray, parts: int, base: int) -> None:
+        if parts == 1:
+            labels[nodes] = base
+            return
+        left_parts = parts // 2
+        order = _bfs_order(g, nodes, rng)
+        w = np.cumsum(g.node_weight[order])
+        target = w[-1] * left_parts / parts
+        cut = int(np.searchsorted(w, target)) + 1
+        cut = min(max(cut, 1), order.shape[0] - 1)
+        split(order[:cut], left_parts, base)
+        split(order[cut:], parts - left_parts, base + left_parts)
+
+    split(np.arange(g.n, dtype=np.int64), k, 0)
+    return labels
+
+
+def _fm_refine(g: Graph, labels: np.ndarray, k: int, passes: int = 4,
+               balance_cap: float = 1.05) -> np.ndarray:
+    """Boundary FM refinement: move boundary nodes to reduce cut, keep balance."""
+    labels = labels.copy()
+    total = g.node_weight.sum()
+    cap = balance_cap * total / k
+    sizes = np.zeros(k)
+    np.add.at(sizes, labels, g.node_weight)
+    indptr, indices, ew = g.indptr, g.indices, g.edge_weight
+    for _ in range(passes):
+        moved = 0
+        for v in range(g.n):
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            if nbrs.size == 0:
+                continue
+            w = ew[indptr[v]:indptr[v + 1]]
+            cur = int(labels[v])
+            score = np.zeros(k)
+            np.add.at(score, labels[nbrs], w)
+            gain = score - score[cur]
+            gain[cur] = 0.0
+            gain[sizes + g.node_weight[v] > cap] = -np.inf
+            best = int(np.argmax(gain))
+            if gain[best] > 1e-12:
+                labels[v] = best
+                sizes[cur] -= g.node_weight[v]
+                sizes[best] += g.node_weight[v]
+                moved += 1
+        if moved == 0:
+            break
+    return labels
+
+
+def metis_partition(g: Graph, k: int, seed: int = 0,
+                    coarsen_to: int = 400) -> np.ndarray:
+    """Multilevel k-way partitioning (METIS family)."""
+    rng = np.random.default_rng(seed)
+    graphs = [g]
+    mappings = []  # mappings[i]: nodes of graphs[i] -> nodes of graphs[i+1]
+    while graphs[-1].n > max(coarsen_to, 4 * k):
+        coarse = _heavy_edge_matching(graphs[-1], rng)
+        if int(coarse.max()) + 1 >= graphs[-1].n:  # matching stalled
+            break
+        mappings.append(coarse)
+        graphs.append(graphs[-1].aggregate(coarse))
+    labels = _greedy_growth_partition(graphs[-1], k, rng)
+    labels = _fm_refine(graphs[-1], labels, k)
+    # uncoarsen with refinement at each level
+    for level in range(len(mappings) - 1, -1, -1):
+        labels = labels[mappings[level]]
+        labels = _fm_refine(graphs[level], labels, k)
+    return labels.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# "+F" — fusion applied to any base partitioning (paper §5.4)
+# ---------------------------------------------------------------------------
+
+def split_into_components(g: Graph, labels: np.ndarray) -> np.ndarray:
+    """Relabel so every connected component of every partition is its own
+    community (the extra step the paper notes makes +F slower for METIS/LPA).
+    """
+    out = np.full(g.n, -1, dtype=np.int64)
+    next_id = 0
+    for p in np.unique(labels):
+        mask = labels == p
+        comp = g.connected_components(mask)
+        ids = comp[mask]
+        out[mask] = ids + next_id
+        next_id += int(ids.max()) + 1 if ids.size else 0
+    return out
+
+
+def with_fusion(base: Callable[..., np.ndarray], g: Graph, k: int,
+                alpha: float = 0.05, seed: int = 0,
+                base_k: Optional[int] = None) -> np.ndarray:
+    """Run ``base`` (with base_k or k target), split into components, fuse to k."""
+    labels = base(g, base_k or k, seed=seed)
+    comms = split_into_components(g, labels)
+    max_part_size = (g.n / k) * (1.0 + alpha)
+    return fuse(g, comms, k, max_part_size)
+
+
+PARTITIONERS: Dict[str, Callable[..., np.ndarray]] = {
+    "random": random_partition,
+    "lpa": lpa_partition,
+    "metis": metis_partition,
+    "leiden_fusion": leiden_fusion,
+    "metis_f": lambda g, k, seed=0: with_fusion(metis_partition, g, k, seed=seed),
+    "lpa_f": lambda g, k, seed=0: with_fusion(lpa_partition, g, k, seed=seed),
+}
+
+
+def get_partitioner(name: str) -> Callable[..., np.ndarray]:
+    try:
+        return PARTITIONERS[name]
+    except KeyError:
+        raise KeyError(f"unknown partitioner {name!r}; "
+                       f"available: {sorted(PARTITIONERS)}")

@@ -1,0 +1,93 @@
+"""Multi-layer GNN (GCN / GraphSAGE) + MLP classifier head.
+
+The GNN body produces node *embeddings* (paper: embeddings from local
+training are pooled and an MLP classifier is trained on them)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (gcn_layer, init_gcn_layer, init_sage_layer, sage_layer)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    kind: str = "gcn"              # "gcn" | "sage"
+    feature_dim: int = 128
+    hidden_dim: int = 256
+    embed_dim: int = 256           # output embedding size
+    num_layers: int = 3
+    dropout: float = 0.5
+    use_kernel: bool = False       # route aggregation through Pallas kernel
+
+
+def init_gnn(key, cfg: GNNConfig) -> PyTree:
+    dims = ([cfg.feature_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1)
+            + [cfg.embed_dim])
+    keys = jax.random.split(key, cfg.num_layers)
+    init = init_gcn_layer if cfg.kind == "gcn" else init_sage_layer
+    return {"layers": [init(keys[i], dims[i], dims[i + 1])
+                       for i in range(cfg.num_layers)]}
+
+
+def gnn_forward(params: PyTree, cfg: GNNConfig, features: jnp.ndarray,
+                edge_src, edge_dst, edge_weight, in_degree,
+                node_mask: Optional[jnp.ndarray] = None,
+                dropout_key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Run the GNN body; returns [N, embed_dim] embeddings."""
+    layer = gcn_layer if cfg.kind == "gcn" else sage_layer
+    h = features
+    if node_mask is not None:
+        h = h * node_mask[:, None]          # zero padded rows
+    n_layers = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        last = i == n_layers - 1
+        h = layer(lp, h, edge_src, edge_dst, edge_weight, in_degree,
+                  activate=not last, use_kernel=cfg.use_kernel)
+        if node_mask is not None:
+            h = h * node_mask[:, None]
+        if dropout_key is not None and cfg.dropout > 0 and not last:
+            dropout_key, sub = jax.random.split(dropout_key)
+            keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1 - cfg.dropout), 0.0)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier on pooled embeddings
+# ---------------------------------------------------------------------------
+def init_mlp(key, in_dim: int, hidden: int, out_dim: int) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    s1, s2 = jnp.sqrt(2.0 / in_dim), jnp.sqrt(2.0 / hidden)
+    return {"w1": jax.random.normal(k1, (in_dim, hidden)) * s1,
+            "b1": jnp.zeros((hidden,)),
+            "w2": jax.random.normal(k2, (hidden, out_dim)) * s2,
+            "b2": jnp.zeros((out_dim,))}
+
+
+def mlp_forward(params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def sigmoid_bce(logits: jnp.ndarray, targets: jnp.ndarray,
+                mask: jnp.ndarray) -> jnp.ndarray:
+    per = jnp.maximum(logits, 0) - logits * targets + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    per = per.mean(axis=-1)
+    return jnp.sum(per * mask) / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,326 @@
+"""Distributed GNN training — the paper's pipeline, SPMD-native.
+
+Two training modes over the k partition subgraphs:
+
+* **local** (the paper's contribution): every partition trains its own GNN
+  replica with NO inter-partition communication. Implemented as a vmap over
+  the stacked partition axis; under `jit` with the partition axis sharded
+  over the mesh `data` axis this is embarrassingly parallel — the lowered
+  HLO contains zero collectives (asserted in tests / measured in §Roofline).
+
+* **sync** (the DGL-style baseline the paper argues against): identical
+  model, but before every GNN layer the halo rows are refreshed from their
+  owner partitions via an `all_gather` over the `data` axis inside
+  `shard_map`. The collective bytes this injects are exactly the paper's
+  "continuous communication".
+
+After training, per-partition embeddings of *owned* nodes are scattered back
+into a global [n, embed] table and an MLP classifier is trained on it
+(paper §5.2)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import NodeDataset, PartitionBatch, HaloExchangeSpec
+from repro.optim import OptState, adamw_init, adamw_update
+from .model import (GNNConfig, gnn_forward, init_gnn, init_mlp, mlp_forward,
+                    sigmoid_bce, softmax_xent)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Per-partition tensors (host-side assembly)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PartitionTensors:
+    """Stacked per-partition training arrays, leading axis k."""
+    features: np.ndarray      # [k, N_pad, F]
+    labels: np.ndarray        # [k, N_pad] int32 or [k, N_pad, T] f32
+    train_mask: np.ndarray    # [k, N_pad] f32 (owned & train & valid)
+    edge_src: np.ndarray      # [k, E_pad]
+    edge_dst: np.ndarray
+    edge_weight: np.ndarray
+    in_degree: np.ndarray
+    node_mask: np.ndarray     # [k, N_pad] f32
+    owned_mask: np.ndarray    # [k, N_pad] bool
+    node_ids: np.ndarray      # [k, N_pad] int32
+
+
+def gather_partition_tensors(ds: NodeDataset, batch: PartitionBatch
+                             ) -> PartitionTensors:
+    ids = np.maximum(batch.node_ids, 0)
+    feats = ds.features[ids] * batch.node_mask[..., None]
+    labels = ds.labels[ids]
+    if not ds.multilabel:
+        labels = labels.astype(np.int32)
+    train = ds.train_mask[ids] & batch.owned_mask & batch.node_mask
+    return PartitionTensors(
+        features=feats.astype(np.float32),
+        labels=labels,
+        train_mask=train.astype(np.float32),
+        edge_src=batch.edge_src, edge_dst=batch.edge_dst,
+        edge_weight=batch.edge_weight, in_degree=batch.in_degree,
+        node_mask=batch.node_mask.astype(np.float32),
+        owned_mask=batch.owned_mask, node_ids=batch.node_ids)
+
+
+# ---------------------------------------------------------------------------
+# Model+head params
+# ---------------------------------------------------------------------------
+def init_partition_models(key, cfg: GNNConfig, num_classes: int, k: int
+                          ) -> PyTree:
+    """k independent GNN+head replicas, stacked on axis 0."""
+    def one(subkey):
+        kb, kh = jax.random.split(subkey)
+        body = init_gnn(kb, cfg)
+        s = jnp.sqrt(2.0 / cfg.embed_dim)
+        head = {"w": jax.random.normal(kh, (cfg.embed_dim, num_classes)) * s,
+                "b": jnp.zeros((num_classes,))}
+        return {"body": body, "head": head}
+    return jax.vmap(one)(jax.random.split(key, k))
+
+
+def _forward_one(params, cfg: GNNConfig, t: Dict[str, jnp.ndarray],
+                 dropout_key=None, halo_refresh: Optional[Callable] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward for ONE partition. Returns (embeddings, logits)."""
+    feats = t["features"]
+    if halo_refresh is not None:
+        feats = halo_refresh(feats, layer_idx=0)
+    emb = gnn_forward(params["body"], cfg, feats, t["edge_src"],
+                      t["edge_dst"], t["edge_weight"], t["in_degree"],
+                      node_mask=t["node_mask"], dropout_key=dropout_key)
+    logits = emb @ params["head"]["w"] + params["head"]["b"]
+    return emb, logits
+
+
+def _loss_one(params, cfg: GNNConfig, t, multilabel: bool, dropout_key):
+    _, logits = _forward_one(params, cfg, t, dropout_key)
+    if multilabel:
+        return sigmoid_bce(logits, t["labels"], t["train_mask"])
+    return softmax_xent(logits, t["labels"], t["train_mask"])
+
+
+def _tensors_dict(pt: PartitionTensors) -> Dict[str, np.ndarray]:
+    return {"features": pt.features, "labels": pt.labels,
+            "train_mask": pt.train_mask, "edge_src": pt.edge_src,
+            "edge_dst": pt.edge_dst, "edge_weight": pt.edge_weight,
+            "in_degree": pt.in_degree, "node_mask": pt.node_mask}
+
+
+# ---------------------------------------------------------------------------
+# LOCAL training (the paper's scheme — zero collectives)
+# ---------------------------------------------------------------------------
+def make_local_train_step(cfg: GNNConfig, multilabel: bool, lr: float = 1e-2
+                          ) -> Callable:
+    """Returns jit-able step(params, opt, tensors, key) -> (params, opt, loss).
+
+    All arrays carry a leading k axis; the step is a pure vmap — sharding the
+    k axis over `data` makes it fully local per device."""
+    def one_step(params, opt, t, key):
+        loss, grads = jax.value_and_grad(_loss_one)(params, cfg, t,
+                                                    multilabel, key)
+        params, opt = adamw_update(grads, opt, params, lr, weight_decay=0.0)
+        return params, opt, loss
+
+    def step(params, opt, tensors, keys):
+        return jax.vmap(one_step)(params, opt, tensors, keys)
+    return step
+
+
+def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
+                epochs: int = 60, lr: float = 1e-2, seed: int = 0,
+                mesh: Optional[Mesh] = None) -> Tuple[PyTree, np.ndarray]:
+    """Paper's local training. Returns (params, global_embeddings [n, E])."""
+    pt = gather_partition_tensors(ds, batch)
+    k = batch.k
+    num_out = ds.num_classes
+    key = jax.random.PRNGKey(seed)
+    params = init_partition_models(key, cfg, num_out, k)
+    opt = jax.vmap(adamw_init)(params)   # per-partition opt state (step: [k])
+    tensors = {n: jnp.asarray(v) for n, v in _tensors_dict(pt).items()}
+
+    step = make_local_train_step(cfg, ds.multilabel, lr)
+    if mesh is not None:
+        shard = NamedSharding(mesh, P("data"))
+        step = jax.jit(step, in_shardings=(shard, shard, shard, shard),
+                       out_shardings=(shard, shard, shard))
+    else:
+        step = jax.jit(step)
+
+    for e in range(epochs):
+        keys = jax.random.split(jax.random.fold_in(key, e), k)
+        params, opt, loss = step(params, opt, tensors, keys)
+    emb = compute_embeddings(params, cfg, tensors)
+    return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
+                                   cfg.embed_dim)
+
+
+def compute_embeddings(params, cfg: GNNConfig, tensors) -> jnp.ndarray:
+    def one(p, t):
+        emb, _ = _forward_one(p, cfg, t)
+        return emb
+    return jax.jit(jax.vmap(one))(params, tensors)
+
+
+def pool_embeddings(emb: np.ndarray, pt: PartitionTensors, n: int,
+                    embed_dim: int) -> np.ndarray:
+    """Scatter owned-node embeddings back to a global [n, E] table."""
+    out = np.zeros((n, embed_dim), dtype=np.float32)
+    for p in range(emb.shape[0]):
+        owned = pt.owned_mask[p]
+        ids = pt.node_ids[p][owned]
+        out[ids] = emb[p][owned]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SYNC baseline (halo exchange every layer — the traffic LF eliminates)
+# ---------------------------------------------------------------------------
+def make_sync_forward(cfg: GNNConfig, halo: HaloExchangeSpec, axis: str = "data"):
+    """Forward with halo refresh between layers, for use inside shard_map.
+
+    Works on a single partition per device (k == mesh data size). The halo
+    exchange is an all_gather of per-destination send buffers."""
+    send_rows = jnp.asarray(halo.send_rows)   # [k, k, H]
+    recv_rows = jnp.asarray(halo.recv_rows)   # [k, k, H]
+
+    def refresh(h: jnp.ndarray, my_idx: jnp.ndarray) -> jnp.ndarray:
+        # Build what I send to every peer: rows of my h.  [k, H, F]
+        mine_send = send_rows[my_idx]                       # [k, H]
+        buf = h[jnp.maximum(mine_send, 0)] * (mine_send >= 0)[..., None]
+        allbuf = jax.lax.all_gather(buf, axis)              # [k, k, H, F]
+        # What peer q sent to me sits at allbuf[q, my_idx]
+        incoming = allbuf[:, my_idx]                        # [k, H, F]
+        rows = recv_rows[my_idx]                            # [k, H]
+        flat_rows = rows.reshape(-1)
+        flat_in = incoming.reshape(-1, h.shape[-1])
+        valid = (flat_rows >= 0)[:, None]
+        h = h.at[jnp.maximum(flat_rows, 0)].set(
+            jnp.where(valid, flat_in, h[jnp.maximum(flat_rows, 0)]))
+        return h
+
+    from .layers import gcn_layer, sage_layer
+    layer_fn = gcn_layer if cfg.kind == "gcn" else sage_layer
+
+    def forward(params, t, my_idx):
+        h = t["features"] * t["node_mask"][:, None]
+        n_layers = len(params["body"]["layers"])
+        for i, lp in enumerate(params["body"]["layers"]):
+            h = refresh(h, my_idx)        # fetch fresh halo activations
+            h = layer_fn(lp, h, t["edge_src"], t["edge_dst"],
+                         t["edge_weight"], t["in_degree"],
+                         activate=i < n_layers - 1)
+            h = h * t["node_mask"][:, None]
+        logits = h @ params["head"]["w"] + params["head"]["b"]
+        return h, logits
+    return forward
+
+
+def make_sync_train_step(cfg: GNNConfig, halo: HaloExchangeSpec,
+                         multilabel: bool, mesh: Mesh, lr: float = 1e-2):
+    """shard_map train step: one partition per `data` device."""
+    from jax.experimental.shard_map import shard_map
+    forward = make_sync_forward(cfg, halo)
+
+    def loss_fn(params, t, my_idx):
+        _, logits = forward(params, t, my_idx)
+        if multilabel:
+            loss = sigmoid_bce(logits, t["labels"], t["train_mask"])
+        else:
+            loss = softmax_xent(logits, t["labels"], t["train_mask"])
+        return loss
+
+    def local_step(params, opt, t):
+        # leading axis is the local shard of k: size 1 per device
+        params1 = jax.tree.map(lambda x: x[0], params)
+        opt1 = jax.tree.map(lambda x: x[0], opt)
+        t1 = jax.tree.map(lambda x: x[0], t)
+        my_idx = jax.lax.axis_index("data")
+        loss, grads = jax.value_and_grad(loss_fn)(params1, t1, my_idx)
+        new_p, new_o = adamw_update(grads, opt1, params1, lr)
+        expand = lambda x: x[None]
+        return (jax.tree.map(expand, new_p), jax.tree.map(expand, new_o),
+                loss[None])
+
+    pspec = P("data")
+    step = shard_map(local_step, mesh=mesh,
+                     in_specs=(pspec, pspec, pspec),
+                     out_specs=(pspec, pspec, pspec))
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# Classifier on pooled embeddings (paper §5.2) + metrics
+# ---------------------------------------------------------------------------
+def train_classifier(ds: NodeDataset, embeddings: np.ndarray,
+                     hidden: int = 256, epochs: int = 150, lr: float = 1e-2,
+                     seed: int = 0) -> Dict[str, float]:
+    """Train the MLP on frozen pooled embeddings; report accuracy/ROC-AUC."""
+    key = jax.random.PRNGKey(seed)
+    params = init_mlp(key, embeddings.shape[1], hidden, ds.num_classes)
+    opt = adamw_init(params)
+    x = jnp.asarray(embeddings)
+    y = jnp.asarray(ds.labels if ds.multilabel else ds.labels.astype(np.int32))
+    tr = jnp.asarray(ds.train_mask.astype(np.float32))
+
+    def loss_fn(p):
+        logits = mlp_forward(p, x)
+        if ds.multilabel:
+            return sigmoid_bce(logits, y, tr)
+        return softmax_xent(logits, y, tr)
+
+    @jax.jit
+    def step(p, o):
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, o = adamw_update(g, o, p, lr)
+        return p, o, loss
+
+    for _ in range(epochs):
+        params, opt, loss = step(params, opt)
+
+    logits = np.asarray(jax.jit(mlp_forward)(params, x))
+    out = {}
+    for split, mask in (("train", ds.train_mask), ("val", ds.val_mask),
+                        ("test", ds.test_mask)):
+        if ds.multilabel:
+            out[split] = float(mean_rocauc(ds.labels[mask], logits[mask]))
+        else:
+            pred = logits[mask].argmax(-1)
+            out[split] = float((pred == ds.labels[mask]).mean())
+    return out
+
+
+def mean_rocauc(y: np.ndarray, score: np.ndarray) -> float:
+    """Mean ROC-AUC over tasks (rank statistic, ties averaged)."""
+    aucs = []
+    for t in range(y.shape[1]):
+        yt, st = y[:, t], score[:, t]
+        pos = yt > 0.5
+        n_pos, n_neg = int(pos.sum()), int((~pos).sum())
+        if n_pos == 0 or n_neg == 0:
+            continue
+        order = np.argsort(st, kind="mergesort")
+        ranks = np.empty_like(order, dtype=np.float64)
+        ranks[order] = np.arange(1, len(st) + 1)
+        # average ties
+        sorted_s = st[order]
+        i = 0
+        while i < len(st):
+            j = i
+            while j + 1 < len(st) and sorted_s[j + 1] == sorted_s[i]:
+                j += 1
+            if j > i:
+                ranks[order[i:j + 1]] = (i + j + 2) / 2.0
+            i = j + 1
+        auc = (ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg)
+        aucs.append(auc)
+    return float(np.mean(aucs)) if aucs else 0.5

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots (validated on CPU in
+interpret mode; see each module's docstring for the TPU blocking design)."""
+from .ops import csr_aggregate, flash_decode
+from .ref import csr_aggregate_ref, flash_decode_ref
+
+__all__ = ["csr_aggregate", "flash_decode", "csr_aggregate_ref",
+           "flash_decode_ref"]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: weighted neighbor aggregation (edge-list SpMM).
+
+The GNN hot-spot: ``out[d] += w[e] * h[src[e]]`` over a destination-sorted
+arc list. GPU implementations use shared-memory atomics; TPU has no scatter
+hardware, so we ADAPT (see DESIGN.md §3): the scatter becomes a **one-hot
+matmul** that feeds the MXU —
+
+    for each edge block E_b and feature tile F_t:
+        G   = h[src[E_b], F_t]                      # gather   [EB, FT]
+        S   = onehot(dst[E_b]) * w[E_b]             # scatter  [N,  EB]
+        out[:, F_t] += S @ G                        # MXU      [N,  FT]
+
+Blocking: the grid is (feature tiles × edge blocks); the node dimension
+stays resident in VMEM (the paper's partitions are small by construction —
+that is the point of partitioning — so N_pad ≤ ~8k keeps the working set
+(N·FT + N·EB + EB·FT) · 4B well under the ~16 MB VMEM budget:
+N=8192, FT=128, EB=256 → 4 + 8 + 0.1 ≈ 12 MB).
+
+Accumulation is f32; the output block index is independent of the edge-block
+grid dimension, so Pallas keeps it resident and we accumulate across edge
+blocks (init at block 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EDGE_BLOCK = 256
+FEAT_TILE = 128
+
+
+def _kernel(src_ref, dst_ref, w_ref, h_ref, out_ref):
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    src = src_ref[...]                       # [EB] int32
+    dst = dst_ref[...]                       # [EB] int32
+    w = w_ref[...].astype(jnp.float32)       # [EB]
+    h = h_ref[...]                           # [N, FT]
+    n = h.shape[0]
+    # gather source rows: [EB, FT]
+    gathered = jnp.take(h, src, axis=0).astype(jnp.float32)
+    # scatter as one-hot matmul: S[i, e] = w[e] * (dst[e] == i)  -> [N, EB]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, src.shape[0]), 0)
+    scatter = jnp.where(rows == dst[None, :], w[None, :], 0.0)
+    out_ref[...] += jax.lax.dot(scatter, gathered,
+                                preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "interpret"))
+def csr_aggregate_pallas(h: jnp.ndarray, edge_src: jnp.ndarray,
+                         edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
+                         num_nodes: int, interpret: bool = True
+                         ) -> jnp.ndarray:
+    """Pallas path. h: [N, F] -> [N, F] (f32 accumulate, cast back).
+
+    Inputs are padded by :func:`repro.kernels.ops.csr_aggregate`; this
+    function requires N % 8 == 0, F % FEAT_TILE == 0, E % EDGE_BLOCK == 0.
+    """
+    n, f = h.shape
+    e = edge_src.shape[0]
+    assert n == num_nodes and f % FEAT_TILE == 0 and e % EDGE_BLOCK == 0, \
+        (n, f, e)
+    grid = (f // FEAT_TILE, e // EDGE_BLOCK)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((EDGE_BLOCK,), lambda ft, eb: (eb,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda ft, eb: (eb,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda ft, eb: (eb,)),
+            pl.BlockSpec((n, FEAT_TILE), lambda ft, eb: (0, ft)),
+        ],
+        out_specs=pl.BlockSpec((n, FEAT_TILE), lambda ft, eb: (0, ft)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=interpret,
+    )(edge_src, edge_dst, edge_weight, h)
+    return out.astype(h.dtype)

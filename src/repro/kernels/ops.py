@@ -1,0 +1,60 @@
+"""Jit'd public wrappers around the Pallas kernels (padding + dispatch).
+
+On CPU (this container) the kernels execute in interpret mode; on TPU set
+``interpret=False`` (the default flips automatically based on the backend).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .csr_aggregate import (EDGE_BLOCK, FEAT_TILE, csr_aggregate_pallas)
+from .flash_decode import flash_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int, value=0) -> jnp.ndarray:
+    size = x.shape[axis]
+    target = ((size + mult - 1) // mult) * mult
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "interpret"))
+def csr_aggregate(h: jnp.ndarray, edge_src: jnp.ndarray,
+                  edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
+                  num_nodes: int, interpret: bool | None = None
+                  ) -> jnp.ndarray:
+    """Weighted neighbor-sum via the Pallas kernel, with automatic padding.
+
+    Semantics match :func:`repro.kernels.ref.csr_aggregate_ref` exactly.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, f = h.shape
+    hp = _pad_to(_pad_to(h, FEAT_TILE, 1), 8, 0)
+    # padding edges carry weight 0 and may point at row 0 safely
+    es = _pad_to(edge_src, EDGE_BLOCK, 0)
+    ed = _pad_to(edge_dst, EDGE_BLOCK, 0)
+    ew = _pad_to(edge_weight, EDGE_BLOCK, 0)
+    out = csr_aggregate_pallas(hp, es, ed, ew, num_nodes=hp.shape[0],
+                               interpret=interpret)
+    return out[:n, :f].astype(h.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 length: jnp.ndarray, interpret: bool | None = None
+                 ) -> jnp.ndarray:
+    """Single-token GQA decode attention. q: [H, D]; k/v: [S, Hkv, D]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_decode_pallas(q, k, v, length, interpret=interpret)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def csr_aggregate_ref(h: jnp.ndarray, edge_src: jnp.ndarray,
+                      edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
+                      num_nodes: int) -> jnp.ndarray:
+    """Weighted neighbor-sum: out[d] = sum_{e: dst[e]=d} w[e] * h[src[e]].
+
+    Padding arcs must carry weight 0 (they may point anywhere)."""
+    msgs = h[edge_src].astype(jnp.float32) * edge_weight[:, None].astype(
+        jnp.float32)
+    out = jax.ops.segment_sum(msgs, edge_dst, num_segments=num_nodes)
+    return out.astype(h.dtype)   # f32 accumulation, like the kernel
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length: jnp.ndarray) -> jnp.ndarray:
+    """Single-token decode attention oracle.
+
+    q: [H, D]; k, v: [S, Hkv, D]; length: scalar valid prefix length.
+    Grouped-query: H heads read kv head h // (H // Hkv). Returns [H, D]."""
+    s, hkv, d = k.shape
+    hq = q.shape[0]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)        # [S, H, D]
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("hd,shd->hs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    mask = (jnp.arange(s) < length)[None, :]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hs,shd->hd", p, vv.astype(jnp.float32)).astype(q.dtype)

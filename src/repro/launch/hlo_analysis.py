@@ -1,0 +1,88 @@
+"""Roofline-term extraction from compiled/lowered HLO.
+
+``collective_bytes`` parses the optimized (post-SPMD) per-device HLO text and
+sums the RESULT-shape bytes of every communication op. Shapes in the
+partitioned module are per-device, so the total is bytes-through-the-links
+per device per step (the §Roofline collective term divides by one chip's
+link bandwidth).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape like ``f32[16,128]`` (layout suffix ignored)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# matches:  %name = f32[8,16]{1,0} all-reduce(...)   and tuple results
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?[\s(]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type result bytes, plus 'total'. Start/done pairs of
+    async collectives are counted once (the -start op carries the shape)."""
+    out: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":       # repeats the -start op's shape
+            continue
+        out[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    out["total"] = sum(out[op] for op in COLLECTIVE_OPS)
+    out.update({f"n_{op}": counts[op] for op in COLLECTIVE_OPS})
+    return out
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 15) -> Dict[str, int]:
+    """Quick profile of the optimized module: op name -> count."""
+    ops: Dict[str, int] = {}
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+                         r"([a-z][a-z0-9-]*)", hlo_text):
+        op = m.group(1)
+        ops[op] = ops.get(op, 0) + 1
+    return dict(sorted(ops.items(), key=lambda kv: -kv[1])[:top])
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int, peak_flops: float = 197e12,
+                   hbm_bw: float = 819e9, link_bw: float = 50e9
+                   ) -> Dict[str, float]:
+    """Three roofline times in seconds (per step, per chip).
+
+    ``flops``/``hbm_bytes`` are per-device numbers from cost_analysis of the
+    partitioned module; ``coll_bytes`` per-device from collective_bytes."""
+    compute = flops / peak_flops
+    memory = hbm_bytes / hbm_bw
+    collective = coll_bytes / link_bw
+    dominant = max((compute, "compute"), (memory, "memory"),
+                   (collective, "collective"))
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant[1],
+            "bound_s": dominant[0]}

@@ -1,0 +1,96 @@
+"""Step builders: train / prefill / decode, with full sharding specs.
+
+``build(cfg, shape_name, mesh, mode)`` returns (jitted_fn, args_sds,
+arg_shardings) ready for ``.lower(*args_sds).compile()`` — ShapeDtypeStructs
+only, no allocation (the multi-pod dry-run path), and equally callable with
+real arrays (the examples / integration tests path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig, effective_config, input_specs
+from repro.models.config import ModelConfig
+from repro.models.inputs import SHAPES, enc_len_for
+from repro.models.lm import init_cache, init_model, prefill_step, serve_step, train_loss
+from repro.optim import adamw_init, adamw_update
+from .sharding import (batch_shardings, cache_shardings, param_shardings,
+                       replicated)
+
+PyTree = Any
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-4):
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: train_loss(p, cfg, batch))(params)
+        params, opt = adamw_update(grads, opt, params, lr, weight_decay=0.01)
+        return params, opt, loss
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def fn(params, batch):
+        return prefill_step(params, cfg, batch)
+    return fn
+
+
+def make_decode_step(cfg: ModelConfig):
+    def fn(params, tokens, cache, lengths):
+        return serve_step(params, cfg, tokens, cache, lengths)
+    return fn
+
+
+def params_spec(cfg: ModelConfig) -> PyTree:
+    """ShapeDtypeStruct tree of the model params (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_model, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def build(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+          mode: str = "dp_tp", lr: float = 1e-4,
+          shape_override=None):
+    """Returns (jitted_fn, args_sds tuple, donate info) for the combo."""
+    shape = shape_override or SHAPES[shape_name]
+    cfg = effective_config(cfg, shape_name)
+    p_sds = params_spec(cfg)
+    p_sh = param_shardings(mesh, p_sds, mode)
+    specs = input_specs(cfg, shape_name, shape=shape_override)
+
+    if shape.kind == "train":
+        o_sds = jax.eval_shape(adamw_init, p_sds)
+        o_sh = type(o_sds)(step=NamedSharding(mesh, P()),
+                           mu=param_shardings(mesh, o_sds.mu, mode),
+                           nu=param_shardings(mesh, o_sds.nu, mode))
+        b_sds = specs["batch"]
+        b_sh = batch_shardings(mesh, b_sds, mode)
+        fn = jax.jit(make_train_step(cfg, lr),
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1))
+        return fn, (p_sds, o_sds, b_sds)
+
+    if shape.kind == "prefill":
+        b_sds = specs["batch"]
+        b_sh = batch_shardings(mesh, b_sds, mode)
+        fn = jax.jit(make_prefill_step(cfg),
+                     in_shardings=(p_sh, b_sh))
+        return fn, (p_sds, b_sds)
+
+    # decode
+    t_sds = specs["tokens"]
+    c_sds = specs["cache"]
+    l_sds = specs["lengths"]
+    c_sh = cache_shardings(mesh, c_sds, shape.global_batch)
+    t_sh = replicated(mesh, t_sds)
+    l_sh = replicated(mesh, l_sds)
+    fn = jax.jit(make_decode_step(cfg),
+                 in_shardings=(p_sh, t_sh, c_sh, l_sh),
+                 out_shardings=(NamedSharding(mesh, P()), c_sh),
+                 donate_argnums=(2,))
+    return fn, (p_sds, t_sds, c_sds, l_sds)

@@ -1,0 +1,8 @@
+"""Model zoo: the 10 assigned architectures over 6 families."""
+from .config import ModelConfig
+from .lm import init_model, init_cache, model_hidden_train, train_loss, serve_step
+from .inputs import SHAPES, InputShape, effective_config, input_specs, make_batch
+
+__all__ = ["ModelConfig", "init_model", "init_cache", "model_hidden_train",
+           "train_loss", "serve_step", "SHAPES", "InputShape",
+           "effective_config", "input_specs", "make_batch"]

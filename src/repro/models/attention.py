@@ -1,0 +1,287 @@
+"""Attention: GQA (+qk_norm, qkv bias, partial RoPE, sliding window), MLA,
+cross-attention; train (chunked-causal) and decode (KV cache) paths.
+
+Training attention is **query-chunked**: a lax.scan over query blocks keeps
+the logits buffer at [B, H, Cq, S] instead of [B, H, S, S] — the flash-
+attention memory profile expressed in XLA-native ops (the Pallas decode
+kernel in repro/kernels handles the serving side; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, rms_norm_heads
+
+Q_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> Dict:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    s = (1.0 / d) ** 0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * dh)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, hkv * dh)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, hkv * dh)) * s).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * dh, d)) * s).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((hkv * dh,), dt)
+        p["bv"] = jnp.zeros((hkv * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: Dict, cfg: ModelConfig, x: jnp.ndarray, positions
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm_heads(q, p["q_norm"])
+        k = rms_norm_heads(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# core attention math (query-chunked)
+# ---------------------------------------------------------------------------
+def _attend_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool, window: Optional[int],
+                    q_offset: int = 0, unroll: bool = False) -> jnp.ndarray:
+    """q: [B, Sq, H, Dh]; k, v: [B, Sk, Hkv, Dh] -> [B, Sq, H, Dh].
+
+    Scans over query chunks; each chunk computes masked softmax against the
+    full K. ``q_offset`` positions queries within the kv timeline."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = dh ** -0.5
+    cq = min(Q_CHUNK, sq)
+    nc = (sq + cq - 1) // cq
+    pad = nc * cq - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qc = qp.reshape(b, nc, cq, h, dh).transpose(1, 0, 2, 3, 4)  # [nc,B,Cq,H,Dh]
+    kg = k.reshape(b, sk, hkv, 1, dh)
+    vg = v.reshape(b, sk, hkv, 1, dv)
+    kpos = jnp.arange(sk)
+
+    def one_chunk(ci, qi):
+        # qi: [B, Cq, H, Dh] -> group view [B, Cq, Hkv, G, Dh]
+        qg = qi.reshape(b, cq, hkv, g, dh)
+        logits = jnp.einsum("bqhgd,bkhud->bhgqk", qg.astype(jnp.float32),
+                            kg.astype(jnp.float32)) * scale  # [B,Hkv,G,Cq,Sk]
+        qpos = q_offset + ci * cq + jnp.arange(cq)
+        mask = jnp.ones((cq, sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bkhud->bqhgd", probs,
+                         vg.astype(jnp.float32))
+        return out.reshape(b, cq, h, dv)
+
+    if unroll:
+        outs = jnp.stack([one_chunk(ci, qc[ci]) for ci in range(nc)])
+    else:
+        outs = jax.lax.map(lambda args: one_chunk(*args),
+                           (jnp.arange(nc), qc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * cq, h, dv)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public paths
+# ---------------------------------------------------------------------------
+def attention_train(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    positions: jnp.ndarray, causal: Optional[bool] = None,
+                    return_kv: bool = False):
+    """Full-sequence self-attention. x: [B, S, d]."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    window = cfg.window if cfg.attention == "sliding" else None
+    causal = cfg.causal if causal is None else causal
+    out = _attend_chunked(q, k, v, causal, window, unroll=cfg.unroll)
+    out = out.reshape(b, s, -1) @ p["wo"]
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def attention_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                     cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     length: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: [B, 1, d]; cache_*: [B, S, Hkv, Dh]; length: [B].
+
+    Returns (out [B, 1, d], new_cache_k, new_cache_v). With a sliding-window
+    config the cache is a ring buffer of size ``window``."""
+    b, _, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s_cache = cache_k.shape[1]
+    pos = length[:, None]                                    # [B, 1]
+    q, k, v = _project_qkv(p, cfg, x, pos)
+    slot = length % s_cache if cfg.attention == "sliding" else length
+    idx = slot[:, None, None, None]
+    onehot = (jnp.arange(s_cache)[None, :, None, None] == idx)
+    cache_k = jnp.where(onehot, k.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(onehot, v.astype(cache_v.dtype), cache_v)
+    # attend: valid = entries < length+1 (ring buffer: all filled slots —
+    # always a PREFIX of the cache, so a prefix-length mask covers both)
+    if cfg.attention == "sliding":
+        filled = jnp.minimum(length + 1, s_cache)
+    else:
+        filled = length + 1
+    if cfg.use_flash_decode:
+        from repro.kernels.ops import flash_decode
+        out = jax.vmap(flash_decode)(q[:, 0], cache_k, cache_v, filled)
+        out = out.reshape(b, 1, h * dh).astype(x.dtype)
+        return out @ p["wo"], cache_k, cache_v
+    kpos = jnp.arange(s_cache)[None, :]
+    valid = kpos < filled[:, None]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) * dh ** -0.5
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dh).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v
+
+
+def cross_attention_train(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                          memory: jnp.ndarray) -> jnp.ndarray:
+    """Decoder->encoder cross attention (no RoPE on memory side)."""
+    b, s, d = x.shape
+    sm = memory.shape[1]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (memory @ p["wk"]).reshape(b, sm, hkv, dh)
+    v = (memory @ p["wv"]).reshape(b, sm, hkv, dh)
+    out = _attend_chunked(q, k, v, causal=False, window=None,
+                          unroll=cfg.unroll)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (deepseek-v2)
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = (1.0 / d) ** 0.5
+    return {
+        # query path: x -> q_lora -> per-head (nope + rope)
+        "w_dq": (jax.random.normal(ks[0], (d, qr)) * s).astype(dt),
+        "w_uq": (jax.random.normal(ks[1], (qr, h * (dn + dr)))
+                 * (1.0 / qr) ** 0.5).astype(dt),
+        # kv path: x -> c_kv (compressed) + shared k_rope
+        "w_dkv": (jax.random.normal(ks[2], (d, kvr + dr)) * s).astype(dt),
+        "w_uk": (jax.random.normal(ks[3], (kvr, h * dn))
+                 * (1.0 / kvr) ** 0.5).astype(dt),
+        "w_uv": (jax.random.normal(ks[4], (kvr, h * dv))
+                 * (1.0 / kvr) ** 0.5).astype(dt),
+        "wo": (jax.random.normal(ks[5], (h * dv, d))
+               * (1.0 / (h * dv)) ** 0.5).astype(dt),
+    }
+
+
+def _mla_qkv(p: Dict, cfg: ModelConfig, x: jnp.ndarray, positions):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q = (x @ p["w_dq"]) @ p["w_uq"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg)
+    ckv_full = x @ p["w_dkv"]                       # [B, S, kvr + dr]
+    c_kv, k_rope = ckv_full[..., :cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_train(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, return_kv: bool = False):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, dv)
+    # pack rope dims alongside nope dims; shared k_rope broadcast per head
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (b, s, h, dr))], axis=-1)
+    out = _attend_chunked(q, k, v, causal=True, window=None,
+                          unroll=cfg.unroll)
+    out = out.reshape(b, s, h * dv) @ p["wo"]
+    if return_kv:
+        return out, c_kv, k_rope     # compressed cache (the MLA win)
+    return out
+
+
+def mla_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
+               length: jnp.ndarray):
+    """Absorbed MLA decode: attends in the compressed kv_lora space, so the
+    cache is [B, S, kvr] + [B, S, dr] — the paper's (DeepSeek's) memory win.
+
+    out = softmax( q_nope·W_uk^T ckv + q_rope·k_rope ) (ckv W_uv) W_o
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    s_cache = cache_ckv.shape[1]
+    pos = length[:, None]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, pos)
+    # write cache at `length`
+    onehot = (jnp.arange(s_cache)[None, :] == length[:, None])[..., None]
+    cache_ckv = jnp.where(onehot, c_kv.astype(cache_ckv.dtype), cache_ckv)
+    cache_krope = jnp.where(onehot, k_rope.astype(cache_krope.dtype),
+                            cache_krope)
+    # absorb W_uk into the query:  q_abs [B, H, kvr]
+    w_uk = p["w_uk"].reshape(kvr, h, dn)            # [kvr, H, Dn]
+    q_abs = jnp.einsum("bhd,khd->bhk", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    logits = jnp.einsum("bhk,bsk->bhs", q_abs,
+                        cache_ckv.astype(jnp.float32))
+    logits += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                         cache_krope.astype(jnp.float32))
+    logits *= (dn + dr) ** -0.5
+    valid = jnp.arange(s_cache)[None, :] <= length[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", probs, cache_ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(kvr, h, dv)
+    out = jnp.einsum("bhk,khd->bhd", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dv).astype(x.dtype)
+    return out @ p["wo"], cache_ckv, cache_krope

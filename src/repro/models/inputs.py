@@ -1,0 +1,126 @@
+"""Input shapes and ShapeDtypeStruct specs for every (arch × shape) pair.
+
+The four assigned input shapes:
+
+    train_4k       seq_len=4,096    global_batch=256   (training)
+    prefill_32k    seq_len=32,768   global_batch=32    (inference-prefill)
+    decode_32k     seq_len=32,768   global_batch=128   (inference-decode)
+    long_500k      seq_len=524,288  global_batch=1     (long-context-decode)
+
+Decode shapes lower ``serve_step`` (ONE token, cache of seq_len); train_4k
+lowers ``train_step``; prefill_32k lowers ``prefill_step``. ``long_500k``
+switches pure-attention configs to the sliding-window variant
+(cfg.long_context == "sliding"); SSM/hybrid archs run natively.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .lm import init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def effective_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Apply the shape-conditional variants (sliding window for long_500k
+    on archs that carry full-attention blocks)."""
+    if shape_name == "long_500k" and "attn" in \
+            [b for b in cfg.blocks] + (["attn"] if "shared_attn" in
+                                       cfg.blocks else []):
+        if cfg.long_context == "sliding" or "shared_attn" in cfg.blocks:
+            return dataclasses.replace(cfg, attention="sliding")
+    return cfg
+
+
+def enc_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Encoder memory length for enc-dec archs (stub audio frontend)."""
+    return max(cfg.d_model // 8, min(shape.seq_len // cfg.enc_seq_divisor,
+                                     4096))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                shape: InputShape | None = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape
+    (weak-type-correct, no device allocation). ``shape`` overrides the
+    registry entry (used by the dry-run's sequence-extrapolation)."""
+    shape = shape or SHAPES[shape_name]
+    cfg = effective_config(cfg, shape_name)
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": SDS((b, s), jnp.int32),
+            "loss_mask": SDS((b, s), jnp.float32),
+        }
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = SDS((b, cfg.num_patch_tokens,
+                                         cfg.d_model), dt)
+        if cfg.frontend == "audio":
+            batch["frames"] = SDS((b, enc_len_for(cfg, shape), cfg.d_model),
+                                  dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {
+            "tokens": SDS((b, s), jnp.int32),
+        }
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = SDS((b, cfg.num_patch_tokens,
+                                         cfg.d_model), dt)
+        if cfg.frontend == "audio":
+            batch["frames"] = SDS((b, enc_len_for(cfg, shape), cfg.d_model),
+                                  dt)
+        return {"batch": batch}
+    # decode: tokens + cache + lengths
+    enc = enc_len_for(cfg, shape) if cfg.encoder_layers else 0
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s, enc_len=enc))
+    return {
+        "tokens": SDS((b, 1), jnp.int32),
+        "cache": cache,
+        "lengths": SDS((b,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Synthetic concrete batches (smoke tests / examples / benchmarks)
+# ---------------------------------------------------------------------------
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+               ) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, jnp.ndarray] = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                              jnp.int32),
+        "loss_mask": jnp.ones((batch, seq), jnp.float32),
+    }
+    if cfg.frontend == "vision":
+        p = cfg.num_patch_tokens
+        out["patch_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (batch, p, cfg.d_model)), dt)
+        out["loss_mask"] = out["loss_mask"].at[:, :p].set(0.0)
+    if cfg.frontend == "audio":
+        e = max(8, seq // cfg.enc_seq_divisor)
+        out["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (batch, e, cfg.d_model)), dt)
+    return out

@@ -1,0 +1,107 @@
+"""Shared neural building blocks: norms, RoPE, FFN (+MoE-free variants)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None) -> Dict:
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def rms_norm_heads(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+                   ) -> jnp.ndarray:
+    """Per-head RMSNorm on [..., H, Dh] (qwen3 qk_norm)."""
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(cfg: ModelConfig, head_dim: int) -> jnp.ndarray:
+    rot = int(head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2,
+                                                dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig
+               ) -> jnp.ndarray:
+    """x: [..., S, H, Dh]; positions: [..., S]. Rotates the first
+    ``rope_fraction`` of the head dim (GLM-style partial rotary)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(cfg, dh)                 # [rot/2]
+    rot = freqs.shape[0] * 2
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,rot/2]
+    cos = jnp.cos(angles)[..., :, None, :]            # [..., S, 1, rot/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    s_in = (2.0 / d) ** 0.5
+    s_out = (2.0 / f) ** 0.5
+    p = {"w_out": (jax.random.normal(ks[2], (f, d)) * s_out).astype(dt)}
+    if cfg.ffn_activation == "swiglu":
+        p["w_gate"] = (jax.random.normal(ks[0], (d, f)) * s_in).astype(dt)
+        p["w_up"] = (jax.random.normal(ks[1], (d, f)) * s_in).astype(dt)
+    else:
+        p["w_up"] = (jax.random.normal(ks[1], (d, f)) * s_in).astype(dt)
+    if cfg.ffn_bias:
+        p["b_up"] = jnp.zeros((f,), dt)
+        p["b_out"] = jnp.zeros((d,), dt)
+    return p
+
+
+def ffn_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.ffn_activation == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        if cfg.ffn_activation == "squared_relu":      # nemotron-4
+            r = jax.nn.relu(h)
+            h = r * r
+        else:
+            h = jax.nn.gelu(h)
+    out = h @ p["w_out"]
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return out

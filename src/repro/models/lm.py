@@ -1,0 +1,561 @@
+"""Full model assembly: decoder-only (dense / MoE / SSM / hybrid / VLM) and
+encoder-decoder (audio) language models.
+
+Structure:
+  params = {
+    "embed":   [V, d] token embedding (bf16)
+    "layers":  scan-stacked layer pytree (homogeneous archs) OR list
+    "first_dense": list of dense layers before MoE stack (deepseek-v2)
+    "shared_attn": one shared attention+FFN block (zamba2)
+    "encoder": {"layers": ..., "final_norm": ...}        (seamless)
+    "final_norm", "head" ([d, V], absent when tied)
+  }
+
+Homogeneous decoders use lax.scan over stacked layer params (small HLO for
+96-layer models); heterogeneous patterns (xLSTM, zamba2) use a python loop.
+Each layer is wrapped in jax.checkpoint when cfg.remat.
+
+The LM loss is sequence-chunked (scan over S blocks): the [B, Sc, V] logits
+buffer never materializes for the full sequence — essential for the 151k/256k
+vocabularies at seq 4096 on a 16 GB chip.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_decode, attention_train,
+                        cross_attention_train, init_attention, init_mla,
+                        mla_decode, mla_train)
+from .config import ModelConfig
+from .layers import apply_norm, ffn_forward, init_ffn, init_norm
+from .moe import init_moe, moe_decode, moe_forward
+from .ssm import (init_mamba, init_mamba_state, init_mlstm, init_mlstm_state,
+                  init_slstm, init_slstm_state, mamba_decode_step,
+                  mamba_forward, mlstm_decode_step, mlstm_forward,
+                  slstm_decode_step, slstm_forward)
+
+PyTree = Any
+LOSS_CHUNK = 512
+
+
+def _remat(f, cfg: ModelConfig):
+    """Per-layer activation checkpointing with the configured policy."""
+    if not cfg.remat:
+        return f
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+
+
+# ---------------------------------------------------------------------------
+# layer init / apply
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str, moe: bool) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict = {}
+    if kind == "attn":
+        p["ln1"] = init_norm(cfg)
+        p["attn"] = init_mla(ks[0], cfg) if cfg.mla else init_attention(ks[0], cfg)
+        if cfg.encoder_layers:          # decoder of an enc-dec model
+            p["ln_cross"] = init_norm(cfg)
+            p["cross"] = init_attention(ks[2], cfg)
+        p["ln2"] = init_norm(cfg)
+        p["ffn"] = init_moe(ks[1], cfg) if moe else init_ffn(ks[1], cfg)
+    elif kind == "enc_attn":
+        p["ln1"] = init_norm(cfg)
+        p["attn"] = init_attention(ks[0], cfg)
+        p["ln2"] = init_norm(cfg)
+        p["ffn"] = init_ffn(ks[1], cfg)
+    elif kind == "mlstm":
+        p["ln1"] = init_norm(cfg)
+        p["mlstm"] = init_mlstm(ks[0], cfg)
+    elif kind == "slstm":
+        p["ln1"] = init_norm(cfg)
+        p["slstm"] = init_slstm(ks[0], cfg)
+    elif kind == "mamba":
+        p["ln1"] = init_norm(cfg)
+        p["mamba"] = init_mamba(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _apply_layer_train(p: Dict, cfg: ModelConfig, kind: str, moe: bool,
+                       x: jnp.ndarray, positions: jnp.ndarray,
+                       memory: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "enc_attn"):
+        h = apply_norm(p["ln1"], x)
+        if cfg.mla and kind == "attn":
+            x = x + mla_train(p["attn"], cfg, h, positions)
+        else:
+            x = x + attention_train(p["attn"], cfg, h, positions,
+                                    causal=(kind == "attn"))
+        if "cross" in p and memory is not None:
+            h = apply_norm(p["ln_cross"], x)
+            x = x + cross_attention_train(p["cross"], cfg, h, memory)
+        h = apply_norm(p["ln2"], x)
+        if moe:
+            out, aux = moe_forward(p["ffn"], cfg, h)
+            x = x + out
+        else:
+            x = x + ffn_forward(p["ffn"], cfg, h)
+    elif kind == "mlstm":
+        h = apply_norm(p["ln1"], x)
+        out, _ = mlstm_forward(p["mlstm"], cfg, h)
+        x = x + out
+    elif kind == "slstm":
+        h = apply_norm(p["ln1"], x)
+        out, _ = slstm_forward(p["slstm"], cfg, h)
+        x = x + out
+    elif kind == "mamba":
+        h = apply_norm(p["ln1"], x)
+        out, _ = mamba_forward(p["mamba"], cfg, h)
+        x = x + out
+    return x, aux
+
+
+def _apply_layer_prefill(p: Dict, cfg: ModelConfig, kind: str, moe: bool,
+                         x: jnp.ndarray, positions: jnp.ndarray,
+                         memory: Optional[jnp.ndarray]):
+    """Like _apply_layer_train but also returns this layer's cache entry."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        h = apply_norm(p["ln1"], x)
+        if cfg.mla:
+            out, ckv, krope = mla_train(p["attn"], cfg, h, positions,
+                                        return_kv=True)
+            cache = {"ckv": ckv, "krope": krope}
+        else:
+            out, k, v = attention_train(p["attn"], cfg, h, positions,
+                                        return_kv=True)
+            cache = {"k": k, "v": v}
+        x = x + out
+        if "cross" in p and memory is not None:
+            h = apply_norm(p["ln_cross"], x)
+            x = x + cross_attention_train(p["cross"], cfg, h, memory)
+        h = apply_norm(p["ln2"], x)
+        if moe:
+            out, aux = moe_forward(p["ffn"], cfg, h)
+            x = x + out
+        else:
+            x = x + ffn_forward(p["ffn"], cfg, h)
+    elif kind == "mlstm":
+        h = apply_norm(p["ln1"], x)
+        out, cache = mlstm_forward(p["mlstm"], cfg, h)
+        x = x + out
+    elif kind == "slstm":
+        h = apply_norm(p["ln1"], x)
+        out, cache = slstm_forward(p["slstm"], cfg, h)
+        x = x + out
+    elif kind == "mamba":
+        h = apply_norm(p["ln1"], x)
+        out, cache = mamba_forward(p["mamba"], cfg, h, return_state=True)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return x, aux, cache
+
+
+def prefill_step(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, PyTree, jnp.ndarray]:
+    """Process a full prompt; returns (last-token logits [B, V], cache,
+    lengths [B]). The cache is sized exactly to the prompt — the serving
+    layer concatenates growth room before decode if needed."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if (pe := batch.get("patch_embeds")) is not None:
+        x = jnp.concatenate([pe.astype(x.dtype), x[:, pe.shape[1]:]], axis=1)
+    memory = (_run_encoder(params, cfg, batch["frames"])
+              if batch.get("frames") is not None else None)
+    positions = jnp.arange(s)[None, :]
+
+    blocks = cfg.blocks
+    homogeneous = all(bk == "attn" for bk in blocks) and not cfg.block_pattern
+    cache: Dict = {}
+    if homogeneous and cfg.scan_layers:
+        fd_caches = []
+        for lp in params.get("first_dense", []):
+            x, _, c = _apply_layer_prefill(lp, cfg, "attn", False, x,
+                                           positions, memory)
+            fd_caches.append(c)
+
+        def body(x, lp):
+            def f(x):
+                return _apply_layer_prefill(lp, cfg, "attn",
+                                            cfg.num_experts > 0, x,
+                                            positions, memory)
+            f = _remat(f, cfg)
+            x, _, c = f(x)
+            return x, c
+
+        x, layer_caches = jax.lax.scan(body, x, params["layers"])
+        cache["first_dense"] = fd_caches
+        cache["layers"] = layer_caches
+    else:
+        per_layer = []
+        for i, kind in enumerate(blocks):
+            lp = (params["shared_attn"] if kind == "shared_attn"
+                  else params["layers"][i])
+            k = "attn" if kind == "shared_attn" else kind
+            x, _, c = _apply_layer_prefill(lp, cfg, k, cfg.is_moe_layer(i),
+                                           x, positions, memory)
+            per_layer.append(c)
+        cache["layers"] = per_layer
+    if memory is not None:
+        cache["memory"] = memory
+    h = apply_norm(params["final_norm"], x)
+    logits = (h[:, -1] @ _head_weight(params)).astype(jnp.float32)
+    lengths = jnp.full((b,), s, jnp.int32)
+    return logits, cache, lengths
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+def init_model(key, cfg: ModelConfig) -> PyTree:
+    dt = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_head, k_enc, k_shared, k_dense = \
+        jax.random.split(key, 6)
+    params: Dict = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size))
+            * (1.0 / cfg.d_model) ** 0.5).astype(dt)
+
+    blocks = cfg.blocks
+    homogeneous = all(b == "attn" for b in blocks) and not cfg.block_pattern
+    if homogeneous and cfg.scan_layers:
+        n_moe_start = cfg.first_k_dense if cfg.num_experts else 0
+        if n_moe_start:
+            dk = jax.random.split(k_dense, n_moe_start)
+            params["first_dense"] = [
+                _init_layer(dk[i], cfg, "attn", moe=False)
+                for i in range(n_moe_start)]
+        n_scan = cfg.num_layers - n_moe_start
+        keys = jax.random.split(k_layers, n_scan)
+        params["layers"] = jax.vmap(
+            lambda kk: _init_layer(kk, cfg, "attn",
+                                   moe=cfg.num_experts > 0))(keys)
+    else:
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        layers = []
+        for i, kind in enumerate(blocks):
+            if kind == "shared_attn":
+                layers.append({})        # weights live in params["shared_attn"]
+            else:
+                layers.append(_init_layer(keys[i], cfg, kind,
+                                          moe=cfg.is_moe_layer(i)))
+        params["layers"] = layers
+        if "shared_attn" in blocks:
+            params["shared_attn"] = _init_layer(k_shared, cfg, "attn",
+                                                moe=False)
+    if cfg.encoder_layers:
+        ek = jax.random.split(k_enc, cfg.encoder_layers)
+        if cfg.scan_layers:
+            enc_layers = jax.vmap(
+                lambda kk: _init_layer(kk, cfg, "enc_attn", moe=False))(ek)
+        else:
+            enc_layers = [_init_layer(ek[i], cfg, "enc_attn", moe=False)
+                          for i in range(cfg.encoder_layers)]
+        params["encoder"] = {
+            "layers": enc_layers,
+            "final_norm": init_norm(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+def _run_encoder(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional encoder over stub frame embeddings [B, Se, d]."""
+    pos = jnp.arange(frames.shape[1])[None, :]
+
+    def body(x, lp):
+        def f(x):
+            y, _ = _apply_layer_train(lp, cfg, "enc_attn", False, x, pos, None)
+            return y
+        f = _remat(f, cfg)
+        return f(x), None
+
+    enc_layers = params["encoder"]["layers"]
+    if isinstance(enc_layers, list):
+        x = frames
+        for lp in enc_layers:
+            x, _ = body(x, lp)
+    else:
+        x, _ = jax.lax.scan(body, frames, enc_layers)
+    return apply_norm(params["encoder"]["final_norm"], x)
+
+
+def model_hidden_train(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                       patch_embeds: Optional[jnp.ndarray] = None,
+                       frames: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token ids -> final hidden states. Returns (h [B,S,d], aux_loss)."""
+    x = params["embed"][tokens]
+    if patch_embeds is not None:        # VLM: patches replace a prefix
+        pcount = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype),
+                             x[:, pcount:]], axis=1)
+    memory = _run_encoder(params, cfg, frames) if frames is not None else None
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    blocks = cfg.blocks
+    homogeneous = all(bk == "attn" for bk in blocks) and not cfg.block_pattern
+    if homogeneous and cfg.scan_layers:
+        for lp in params.get("first_dense", []):
+            x, _ = _apply_layer_train(lp, cfg, "attn", False, x, positions,
+                                      memory)
+
+        def body(carry, lp):
+            x, aux = carry
+
+            def f(x):
+                return _apply_layer_train(lp, cfg, "attn",
+                                          cfg.num_experts > 0, x, positions,
+                                          memory)
+            f = _remat(f, cfg)
+            x, a = f(x)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["layers"])
+    else:
+        for i, kind in enumerate(blocks):
+            lp = (params["shared_attn"] if kind == "shared_attn"
+                  else params["layers"][i])
+            k = "attn" if kind == "shared_attn" else kind
+
+            def f(x, lp=lp, k=k, i=i):
+                return _apply_layer_train(lp, cfg, k, cfg.is_moe_layer(i),
+                                          x, positions, memory)
+            f = _remat(f, cfg)
+            x, a = f(x)
+            aux_total = aux_total + a
+    return apply_norm(params["final_norm"], x), aux_total
+
+
+def _head_weight(params) -> jnp.ndarray:
+    return params["head"] if "head" in params else params["embed"].T
+
+
+def chunked_ce_loss(h: jnp.ndarray, w_head: jnp.ndarray,
+                    labels: jnp.ndarray, mask: jnp.ndarray,
+                    chunk: int = LOSS_CHUNK, unroll: bool = False
+                    ) -> jnp.ndarray:
+    """Next-token CE without materializing [B, S, V]: scan over S chunks."""
+    b, s, d = h.shape
+    c = min(chunk, s)
+    nc = (s + c - 1) // c
+    pad = nc * c - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, c).transpose(1, 0, 2)
+
+    v = w_head.shape[-1]
+
+    def body(acc, inp):
+        hi, li, mi = inp
+        logits = (hi @ w_head).astype(jnp.float32)          # [B, c, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via one-hot reduce, NOT take_along_axis: a gather along
+        # the vocab axis would force an all-gather of the vocab-sharded
+        # logits (~20 GB/chunk at V=152k); the masked sum keeps V sharded
+        # and reduces to a [B, c] all-reduce. (EXPERIMENTS.md §Perf #1)
+        onehot = li[..., None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, v), 2)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        nll = (logz - gold) * mi
+        return (acc[0] + nll.sum(), acc[1] + mi.sum()), None
+
+    init = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if unroll:
+        acc = init
+        for i in range(nc):
+            acc, _ = body(acc, (hc[i], lc[i], mc[i]))
+        tot, cnt = acc
+    else:
+        (tot, cnt), _ = jax.lax.scan(body, init, (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+               ) -> jnp.ndarray:
+    """batch: tokens [B,S], loss_mask [B,S] (+ patch_embeds / frames)."""
+    h, aux = model_hidden_train(params, cfg, batch["tokens"],
+                                batch.get("patch_embeds"),
+                                batch.get("frames"))
+    labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    mask = jnp.pad(batch["loss_mask"][:, 1:], ((0, 0), (0, 1))
+                   ).astype(jnp.float32)
+    loss = chunked_ce_loss(h, _head_weight(params), labels, mask,
+                           unroll=cfg.unroll)
+    return loss + cfg.router_aux_weight * aux
+
+
+def grow_cache(cache: PyTree, target_len: int) -> PyTree:
+    """Pad prefill caches ("k"/"v"/"ckv"/"krope", seq axis 1) to target_len
+    so decode has growth room. SSM states and encoder memory are untouched."""
+    def grow(path, leaf):
+        names = {getattr(k, "key", None) for k in path}
+        if names & {"k", "v", "ckv", "krope"}:
+            # k/v: [(L,)B,S,Hkv,Dh] -> seq axis ndim-3;
+            # ckv/krope: [(L,)B,S,R] -> seq axis ndim-2.
+            axis = leaf.ndim - 3 if names & {"k", "v"} else leaf.ndim - 2
+            pad = [(0, 0)] * leaf.ndim
+            pad[axis] = (0, max(0, target_len - leaf.shape[axis]))
+            return jnp.pad(leaf, pad)
+        return leaf
+    return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + single-token decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               enc_len: int = 0) -> PyTree:
+    """Cache pytree matching the layer structure.
+
+    Attention layers: k/v ring buffers [B, S(, ...)]; MLA: compressed c_kv;
+    SSM layers: recurrent state. For sliding-window configs the attention
+    cache is only ``cfg.window`` long."""
+    dt = jnp.dtype(cfg.dtype)
+    s_att = min(seq_len, cfg.window) if cfg.attention == "sliding" else seq_len
+
+    def attn_cache():
+        if cfg.mla:
+            return {"ckv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dt),
+                    "krope": jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim),
+                                       dt)}
+        return {"k": jnp.zeros((batch, s_att, cfg.num_kv_heads,
+                                cfg.head_dim), dt),
+                "v": jnp.zeros((batch, s_att, cfg.num_kv_heads,
+                                cfg.head_dim), dt)}
+
+    blocks = cfg.blocks
+    homogeneous = all(b == "attn" for b in blocks) and not cfg.block_pattern
+    cache: Dict = {}
+    if homogeneous and cfg.scan_layers:
+        n_scan = cfg.num_layers - (cfg.first_k_dense if cfg.num_experts else 0)
+        cache["first_dense"] = [attn_cache() for _ in
+                                range(cfg.first_k_dense
+                                      if cfg.num_experts else 0)]
+        cache["layers"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_scan,) + x.shape).copy(),
+            attn_cache())
+    else:
+        per_layer = []
+        for kind in blocks:
+            if kind in ("attn", "shared_attn"):
+                per_layer.append(attn_cache())
+            elif kind == "mlstm":
+                per_layer.append(init_mlstm_state(cfg, batch))
+            elif kind == "slstm":
+                per_layer.append(init_slstm_state(cfg, batch))
+            elif kind == "mamba":
+                per_layer.append(init_mamba_state(cfg, batch))
+        cache["layers"] = per_layer
+    if cfg.encoder_layers:
+        cache["memory"] = jnp.zeros((batch, enc_len, cfg.d_model), dt)
+    return cache
+
+
+def _decode_attn_layer(lp, cfg, x, c, length, memory):
+    h = apply_norm(lp["ln1"], x)
+    if cfg.mla:
+        out, ckv, krope = mla_decode(lp["attn"], cfg, h, c["ckv"],
+                                     c["krope"], length)
+        c = {"ckv": ckv, "krope": krope}
+    else:
+        out, ck, cv = attention_decode(lp["attn"], cfg, h, c["k"], c["v"],
+                                       length)
+        c = {"k": ck, "v": cv}
+    x = x + out
+    if "cross" in lp and memory is not None:
+        h = apply_norm(lp["ln_cross"], x)
+        x = x + cross_attention_train(lp["cross"], cfg, h, memory)
+    h = apply_norm(lp["ln2"], x)
+    if cfg.num_experts and "router" in lp["ffn"]:
+        x = x + moe_decode(lp["ffn"], cfg, h)
+    else:
+        x = x + ffn_forward(lp["ffn"], cfg, h)
+    return x, c
+
+
+def serve_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
+               cache: PyTree, lengths: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, PyTree]:
+    """Decode ONE token. tokens: [B, 1]; lengths: [B] (current cache fill).
+
+    Returns (logits [B, V], new_cache)."""
+    x = params["embed"][tokens]                      # [B, 1, d]
+    memory = cache.get("memory") if cfg.encoder_layers else None
+    blocks = cfg.blocks
+    homogeneous = all(b == "attn" for b in blocks) and not cfg.block_pattern
+
+    if homogeneous and cfg.scan_layers:
+        new_fd = []
+        for lp, c in zip(params.get("first_dense", []),
+                         cache.get("first_dense", [])):
+            x, c = _decode_attn_layer(lp, cfg, x, c, lengths, memory)
+            new_fd.append(c)
+
+        def body(x, lp_c):
+            lp, c = lp_c
+            x, c = _decode_attn_layer(lp, cfg, x, c, lengths, memory)
+            return x, c
+
+        x, new_cache_layers = jax.lax.scan(body, x,
+                                           (params["layers"],
+                                            cache["layers"]))
+        new_cache = dict(cache)
+        new_cache["layers"] = new_cache_layers
+        new_cache["first_dense"] = new_fd
+    else:
+        new_layers = []
+        for i, kind in enumerate(blocks):
+            lp = (params["shared_attn"] if kind == "shared_attn"
+                  else params["layers"][i])
+            c = cache["layers"][i]
+            if kind in ("attn", "shared_attn"):
+                x, c = _decode_attn_layer(lp, cfg, x, c, lengths, memory)
+            elif kind == "mlstm":
+                h = apply_norm(lp["ln1"], x)
+                out, c = mlstm_decode_step(lp["mlstm"], cfg, h, c)
+                x = x + out
+            elif kind == "slstm":
+                h = apply_norm(lp["ln1"], x)
+                out, c = slstm_decode_step(lp["slstm"], cfg, h, c)
+                x = x + out
+            elif kind == "mamba":
+                h = apply_norm(lp["ln1"], x)
+                out, c = mamba_decode_step(lp["mamba"], cfg, h, c)
+                x = x + out
+            new_layers.append(c)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layers
+
+    h = apply_norm(params["final_norm"], x)
+    logits = (h[:, 0] @ _head_weight(params)).astype(jnp.float32)
+    return logits, new_cache

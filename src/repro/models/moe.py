@@ -1,0 +1,149 @@
+"""Mixture-of-Experts with sort-based token dispatch (expert-parallel).
+
+Dispatch is Megablocks-style but static-shape: tokens are argsorted by their
+routed expert, positioned within per-expert capacity buckets, and scattered
+into an [E, C, d] buffer. Expert FFNs run vmapped over E; the buffer's E axis
+is sharded over the ``model`` mesh axis, so the scatter/gather lowers to the
+all-to-all traffic that expert parallelism actually costs — which is what the
+LF expert-placement optimization (repro.core.expert_placement) minimizes.
+
+Shared experts (qwen2-moe: 4, deepseek-v2: 2) run densely on every token.
+The router adds the standard load-balance auxiliary loss (Switch eq. 4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ffn_forward, init_ffn
+
+
+def _padded_e(cfg: ModelConfig) -> int:
+    return max(cfg.experts_pad_to, cfg.num_experts)
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    d, e, f = cfg.d_model, _padded_e(cfg), cfg.moe_d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    s_in, s_out = (2.0 / d) ** 0.5, (2.0 / f) ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * s_in).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * s_in).astype(dt),
+        "w_out": (jax.random.normal(ks[3], (e, f, d)) * s_out).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        sk = jax.random.split(jax.random.fold_in(key, 7),
+                              cfg.num_shared_experts)
+        p["shared"] = [init_ffn(sk[i], cfg, d_ff=cfg.moe_d_ff)
+                       for i in range(cfg.num_shared_experts)]
+    return p
+
+
+def _expert_ffn(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [E, C, d] -> [E, C, d], vmapped over experts."""
+    def one(wg, wu, wo, xe):
+        if cfg.ffn_activation == "swiglu":
+            h = jax.nn.silu(xe @ wg) * (xe @ wu)
+        else:
+            h = jax.nn.gelu(xe @ wu)
+        return h @ wo
+    return jax.vmap(one)(p["w_gate"], p["w_up"], p["w_out"], x)
+
+
+def moe_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    Dispatch is GROUP-LOCAL (one group per batch row, vmapped over B): the
+    argsort/bucketing arithmetic then never crosses the data-sharded batch
+    axis, so SPMD keeps it entirely on-device; the only communication left
+    is the genuine token<->expert resharding at the [B, E, C, d] buffer
+    boundary (data axis <-> model axis). A global-T dispatch instead makes
+    XLA partition a distributed sort and all-reduce full dispatch buffers —
+    measured 4x worse collective traffic (EXPERIMENTS.md §Perf P3.2).
+    Capacity is per (row, expert): C = ceil(cf * k * S / E_real)."""
+    b, s, d = x.shape
+    e, k = _padded_e(cfg), cfg.top_k
+    logits = (x.astype(jnp.float32) @ p["router"])           # [B, S, E_pad]
+    if e > cfg.num_experts:      # mask dummy padding experts (never routed)
+        pad_mask = jnp.arange(e) >= cfg.num_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # [B, S, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+
+    # ---- load-balance aux loss (Switch): E * sum_e f_e * P_e --------------
+    me = probs.reshape(-1, e).mean(axis=0)
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0].reshape(-1), e)
+    ce = onehot_top1.mean(axis=0)                            # token fraction
+    aux = cfg.num_experts * jnp.sum(me * ce)     # real experts only
+
+    cap = int(cfg.capacity_factor * k * s / cfg.num_experts) + 1
+
+    # ---- one-hot einsum dispatch (Switch-style): NO sorts, NO data-
+    # dependent gathers — every op is a dense matmul/cumsum that the SPMD
+    # partitioner tiles exactly (dispatch einsum local per (data, model)
+    # tile; only the combine contraction all-reduces a [B,S,d] partial).
+    # Position of each token within its expert's capacity bucket, assigned
+    # in routing-priority order (k=0 strongest), per batch row:
+    dispatch = jnp.zeros((b, s, e, cap), x.dtype)            # [B,S,E,C]
+    combine_w = jnp.zeros((b, s, e, cap), jnp.float32)
+    offset = jnp.zeros((b, 1, e), jnp.float32)
+    for kk in range(k):
+        m = jax.nn.one_hot(expert_idx[..., kk], e)           # [B, S, E]
+        pos = jnp.cumsum(m, axis=1) - m + offset             # pos before token
+        valid = m * (pos < cap)
+        slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap) # [B,S,E,C]
+        dispatch = dispatch + (slot_oh * valid[..., None]).astype(x.dtype)
+        combine_w = combine_w + slot_oh * (
+            valid * gate_vals[..., kk:kk + 1])[..., None]
+        offset = offset + m.sum(axis=1, keepdims=True)
+    buf = jnp.einsum("bsec,bsd->becd", dispatch, x)          # [B, E, C, d]
+    # ---- expert compute (E axis shards over `model`, B over data) ----------
+    if cfg.ffn_activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["w_up"]))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_out"])    # [B, E, C, d]
+    # ---- combine -------------------------------------------------------------
+    out = jnp.einsum("bsec,becd->bsd", combine_w.astype(x.dtype), out_buf)
+    # ---- shared experts run densely ----------------------------------------
+    if cfg.num_shared_experts:
+        for sp in p["shared"]:
+            out = out + ffn_forward(sp, cfg, x)
+    return out, aux.astype(jnp.float32)
+
+
+def moe_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Single-token MoE ([B, 1, d]): dense top-k gather, no capacity drop."""
+    b, _, d = x.shape
+    logits = x[:, 0].astype(jnp.float32) @ p["router"]
+    e_pad = p["router"].shape[-1]
+    if e_pad > cfg.num_experts:
+        logits = jnp.where(jnp.arange(e_pad)[None, :] >= cfg.num_experts,
+                           -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)              # [B, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    wg = p["w_gate"][idx]                                    # [B, K, d, f]
+    wu = p["w_up"][idx]
+    wo = p["w_out"][idx]
+    xe = x[:, 0][:, None, None, :]                           # [B, 1, 1, d]
+    if cfg.ffn_activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", x[:, 0], wg)) * \
+            jnp.einsum("bd,bkdf->bkf", x[:, 0], wu)
+    else:
+        h = jax.nn.gelu(jnp.einsum("bd,bkdf->bkf", x[:, 0], wu))
+    y = jnp.einsum("bkf,bkfd->bkd", h, wo)
+    out = (y * gate[..., None].astype(x.dtype)).sum(axis=1)[:, None]
+    if cfg.num_shared_experts:
+        for sp in p["shared"]:
+            out = out + ffn_forward(sp, cfg, x)
+    return out

@@ -1,0 +1,381 @@
+"""SSM & recurrent blocks: Mamba2 (SSD), xLSTM's mLSTM and sLSTM.
+
+TPU adaptation (DESIGN.md §3): the GPU reference implementations use fused
+CUDA scans; here the shared compute core is **chunked linear attention** —
+within a chunk the recurrence is unrolled into two MXU matmuls (intra-chunk
+masked attention + state read), across chunks a lax.scan carries the state:
+
+    S_t = a_t * S_{t-1} + k_t v_t^T          (per head, a_t scalar decay)
+    y_t = q_t^T S_t                           (+ normalizer for mLSTM)
+
+This is exactly Mamba2's SSD duality and GLA-style mLSTM. The sLSTM's
+scalar-memory exponential gating is inherently sequential -> lax.scan over
+time (it exists in xLSTM precisely to trade parallelism for expressivity;
+we keep it faithful and accept the scan).
+
+mLSTM deviation (recorded): the exponential input gate + max-stabilizer of
+the paper is replaced by sigmoid gates with a large forget bias — the
+stabilizer state does not commute with chunk-parallel form; sigmoid gating
+keeps the identical state-update structure and is TPU-stable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear attention core
+# ---------------------------------------------------------------------------
+def chunked_linear_attention(q, k, v, log_decay, state: Optional[jnp.ndarray],
+                             chunk: int, normalize: bool = False,
+                             norm_state: Optional[jnp.ndarray] = None,
+                             unroll: bool = False):
+    """q,k: [B,S,H,Dk]; v: [B,S,H,Dv]; log_decay: [B,S,H] (<= 0).
+
+    Returns (y [B,S,H,Dv], final_state [B,H,Dk,Dv], final_norm [B,H,Dk]).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    nc = (s + c - 1) // c
+    pad = nc * c - s
+    if pad:
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] *
+                                 (x.ndim - 2))
+        q, k, v, log_decay = zpad(q), zpad(k), zpad(v), zpad(log_decay)
+        # padded decay 0 => a=1, padded k,v are 0 => state unchanged
+    f32 = jnp.float32
+    qc = q.reshape(b, nc, c, h, dk).astype(f32)
+    kc = k.reshape(b, nc, c, h, dk).astype(f32)
+    vc = v.reshape(b, nc, c, h, dv).astype(f32)
+    lc = log_decay.reshape(b, nc, c, h).astype(f32)
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+    if norm_state is None:
+        norm_state = jnp.zeros((b, h, dk), f32)
+
+    def step(carry, inp):
+        S, n = carry
+        qi, ki, vi, li = inp                       # [B,c,H,*]
+        cum = jnp.cumsum(li, axis=1)               # inclusive [B,c,H]
+        total = cum[:, -1]                         # [B,H]
+        # intra-chunk: D[i,j] = exp(cum_i - cum_j) for j<=i  (i>j strictly
+        # includes a_i..a_{j+1}; j==i -> 1)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # [B,i,j,H]
+        tri = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])
+        D = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        logits = jnp.einsum("bihd,bjhd->bijh", qi, ki) * D
+        y = jnp.einsum("bijh,bjhv->bihv", logits, vi)
+        # inter-chunk: read decayed previous state
+        decay_i = jnp.exp(cum)                      # [B,c,H]
+        y += jnp.einsum("bihd,bhdv->bihv", qi * decay_i[..., None], S)
+        # normalizer (mLSTM): n_i = sum_{j<=i} D[i,j] k_j + exp(cum_i) n_prev
+        nn = jnp.einsum("bijh,bjhd->bihd", D, ki)
+        nn += decay_i[..., None] * n[:, None]
+        # state update: S' = exp(total) S + sum_j exp(total - cum_j) k_j v_j^T
+        w = jnp.exp(total[:, None] - cum)           # [B,c,H]
+        S = jnp.exp(total)[..., None, None] * S + jnp.einsum(
+            "bjhd,bjhv->bhdv", kc_w := ki * w[..., None], vi)
+        n = jnp.exp(total)[..., None] * n + kc_w.sum(axis=1)
+        return (S, n), (y, nn)
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lc.transpose(1, 0, 2, 3))
+    if unroll:
+        carry = (state, norm_state)
+        ys_list, ns_list = [], []
+        for i in range(nc):
+            carry, (yi, ni) = step(carry, jax.tree.map(lambda a: a[i], xs))
+            ys_list.append(yi)
+            ns_list.append(ni)
+        state, norm_state = carry
+        ys, ns = jnp.stack(ys_list), jnp.stack(ns_list)
+    else:
+        (state, norm_state), (ys, ns) = jax.lax.scan(
+            step, (state, norm_state), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, h, dv)[:, :s]
+    if normalize:
+        n_full = ns.transpose(1, 0, 2, 3, 4).reshape(b, nc * c, h, dk)[:, :s]
+        qn = q.reshape(b, nc * c, h, dk)[:, :s].astype(f32)
+        denom = jnp.abs(jnp.einsum("bshd,bshd->bsh", qn, n_full))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return y, state, norm_state
+
+
+def linear_attention_step(q, k, v, log_decay, state, norm_state):
+    """Single-token recurrent step. q,k: [B,H,Dk]; v: [B,H,Dv];
+    log_decay: [B,H]. Returns (y [B,H,Dv], state, norm)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_decay.astype(f32))[..., None, None]
+    state = a * state + jnp.einsum("bhd,bhv->bhdv", k.astype(f32),
+                                   v.astype(f32))
+    norm_state = a[..., 0] * norm_state + k.astype(f32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(f32), state)
+    return y, state, norm_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = 2 * d                       # inner dim (expand=2)
+    hd = 64                          # mamba2 head dim
+    nh = di // hd
+    dstate = cfg.ssm_state_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    s = (1.0 / d) ** 0.5
+    return {
+        # in_proj -> [z(di), x(di), B(dstate), C(dstate), dt(nh)]
+        "w_in": (jax.random.normal(
+            ks[0], (d, 2 * di + 2 * dstate + nh)) * s).astype(dt),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_kernel,
+                                           di + 2 * dstate)) * 0.1).astype(dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (di, d))
+                  * (1.0 / di) ** 0.5).astype(dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel causal conv. x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def mamba_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  state: Optional[Dict] = None, return_state: bool = False
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """x: [B, S, d]. Returns (y, final_state). SSD chunked path."""
+    b, s, d = x.shape
+    di = 2 * d
+    hd = 64
+    nh = di // hd
+    dstate = cfg.ssm_state_dim
+    proj = x @ p["w_in"]
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * dstate], axis=-1)
+    xbc = _causal_conv(xbc, p["conv"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + dstate], axis=-1)
+    dt_act = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                          # [nh] negative
+    log_a = (dt_act * A).reshape(b, s, nh)            # [B,S,H] <= 0
+    v = xs.reshape(b, s, nh, hd) * dt_act.reshape(b, s, nh, 1).astype(x.dtype)
+    k = jnp.broadcast_to(Bm[:, :, None, :], (b, s, nh, dstate))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (b, s, nh, dstate))
+    st = state["ssm"] if state else None
+    y, st_new, _ = chunked_linear_attention(q, k, v, log_a, st,
+                                            cfg.chunk_size,
+                                            unroll=cfg.unroll)
+    y = y.reshape(b, s, di).astype(x.dtype) \
+        + xs * jnp.repeat(p["D"], hd).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    new_state = {}
+    if return_state:
+        # decode handoff: final SSM state + last K-1 pre-conv rows
+        raw_xbc = proj[..., di:2 * di + 2 * dstate]
+        tail = jnp.pad(raw_xbc, ((0, 0), (cfg.conv_kernel - 1, 0),
+                                 (0, 0)))[:, -(cfg.conv_kernel - 1):]
+        new_state = {"ssm": st_new, "conv": tail}
+    return out, new_state
+
+
+def mamba_decode_step(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                      state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """x: [B, 1, d]; state: {"ssm": [B,H,Dk,Dv], "conv": [B,K-1,C]}."""
+    b, _, d = x.shape
+    di = 2 * d
+    hd = 64
+    nh = di // hd
+    dstate = cfg.ssm_state_dim
+    proj = x @ p["w_in"]                              # [B,1,*]
+    z, xbc, dt_raw = jnp.split(proj, [di, 2 * di + 2 * dstate], axis=-1)
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)   # [B,K,C]
+    conv_out = (hist * p["conv"]).sum(axis=1, keepdims=True)
+    xbc = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + dstate], axis=-1)
+    dt_act = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    log_a = dt_act * A                                # [B,nh]
+    v = (xs[:, 0].reshape(b, nh, hd)
+         * dt_act.reshape(b, nh, 1).astype(x.dtype))
+    k = jnp.broadcast_to(Bm[:, 0, None, :], (b, nh, dstate))
+    q = jnp.broadcast_to(Cm[:, 0, None, :], (b, nh, dstate))
+    y, ssm, _ = linear_attention_step(q, k, v, log_a, state["ssm"],
+                                      jnp.zeros((b, nh, dstate)))
+    y = y.reshape(b, 1, di).astype(x.dtype) \
+        + xs * jnp.repeat(p["D"], hd).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], {"ssm": ssm, "conv": hist[:, 1:]}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    di = 2 * d
+    nh = di // 64
+    return {"ssm": jnp.zeros((batch, nh, cfg.ssm_state_dim, 64), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1,
+                               di + 2 * cfg.ssm_state_dim),
+                              jnp.dtype(cfg.dtype))}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = (1.0 / d) ** 0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, d)) * s).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, d)) * s).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, d)) * s).astype(dt),
+        "w_if": (jax.random.normal(ks[3], (d, 2 * h)) * s).astype(dt),
+        "b_if": jnp.concatenate([jnp.zeros((h,)),
+                                 jnp.full((h,), 4.0)]).astype(jnp.float32),
+        "wo_gate": (jax.random.normal(ks[4], (d, d)) * s).astype(dt),
+        "w_out": (jax.random.normal(ks[5], (d, d)) * s).astype(dt),
+    }
+
+
+def mlstm_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    q = (x @ p["wq"]).reshape(b, s, h, dh) * dh ** -0.5
+    k = (x @ p["wk"]).reshape(b, s, h, dh) * dh ** -0.5
+    v = (x @ p["wv"]).reshape(b, s, h, dh)
+    gates = (x @ p["w_if"]).astype(jnp.float32) + p["b_if"]
+    i_gate = jax.nn.sigmoid(gates[..., :h])                 # [B,S,H]
+    log_f = jax.nn.log_sigmoid(gates[..., h:])              # <= 0
+    st = state["S"] if state else None
+    ns = state["n"] if state else None
+    y, S, n = chunked_linear_attention(q, k * i_gate[..., None], v, log_f,
+                                       st, cfg.chunk_size, normalize=True,
+                                       norm_state=ns, unroll=cfg.unroll)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = y * jax.nn.sigmoid(x @ p["wo_gate"])
+    return y @ p["w_out"], {"S": S, "n": n}
+
+
+def mlstm_decode_step(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                      state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    b, _, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    q = (x[:, 0] @ p["wq"]).reshape(b, h, dh) * dh ** -0.5
+    k = (x[:, 0] @ p["wk"]).reshape(b, h, dh) * dh ** -0.5
+    v = (x[:, 0] @ p["wv"]).reshape(b, h, dh)
+    gates = (x[:, 0] @ p["w_if"]).astype(jnp.float32) + p["b_if"]
+    i_gate = jax.nn.sigmoid(gates[..., :h])
+    log_f = jax.nn.log_sigmoid(gates[..., h:])
+    y, S, n = linear_attention_step(q, k * i_gate[..., None], v, log_f,
+                                    state["S"], state["n"])
+    denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n))
+    y = (y / jnp.maximum(denom, 1.0)[..., None]).reshape(b, 1, d)
+    y = y.astype(x.dtype) * jax.nn.sigmoid(x @ p["wo_gate"])
+    return y @ p["w_out"], {"S": S, "n": n}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    return {"S": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block (sequential scan; faithful exponential gating with
+# max-stabilizer state)
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    s = (1.0 / d) ** 0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(dt),
+        # block-diagonal recurrent weights, per head: [H, Dh, 4*Dh]
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh))
+              * (1.0 / dh) ** 0.5).astype(jnp.float32),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (d, d)) * s).astype(dt),
+    }
+
+
+def _slstm_cell(p, cfg, xt, carry):
+    """One sLSTM step. xt: [B, 4d] (pre-projected). carry: dict of [B,H,Dh]."""
+    h_prev, c_prev, n_prev, m_prev = (carry["h"], carry["c"], carry["n"],
+                                      carry["m"])
+    b = xt.shape[0]
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev, p["r"])        # [B,H,4*Dh]
+    pre = (xt.reshape(b, nh, 4 * dh).astype(jnp.float32) + rec
+           + p["bias"].reshape(nh, 4 * dh))
+    z, i_raw, f_raw, o_raw = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_raw)
+    log_i = i_raw                                           # exp input gate
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    i_st = jnp.exp(log_i - m_new)
+    f_st = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_st * c_prev + i_st * z
+    n_new = f_st * n_prev + i_st
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                  state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    xin = x @ p["w_in"]                                     # [B,S,4d]
+
+    def step(carry, xt):
+        new = _slstm_cell(p, cfg, xt, carry)
+        return new, new["h"]
+
+    state, hs = jax.lax.scan(step, state, xin.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    return y @ p["w_out"], state
+
+
+def slstm_decode_step(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                      state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    xin = x[:, 0] @ p["w_in"]
+    new = _slstm_cell(p, cfg, xin, state)
+    b = x.shape[0]
+    y = new["h"].reshape(b, 1, cfg.d_model).astype(x.dtype)
+    return y @ p["w_out"], new
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict:
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    shape = (batch, nh, dh)
+    return {"h": jnp.zeros(shape, jnp.float32),
+            "c": jnp.zeros(shape, jnp.float32),
+            "n": jnp.zeros(shape, jnp.float32),
+            "m": jnp.full(shape, -1e30, jnp.float32)}

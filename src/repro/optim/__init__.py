@@ -1,0 +1,6 @@
+"""Optimizers and schedules (pytree-native; no optax dependency)."""
+from .adamw import OptState, adamw_init, adamw_update, sgd_update
+from .schedules import constant_schedule, cosine_schedule, linear_warmup_cosine
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "sgd_update",
+           "constant_schedule", "cosine_schedule", "linear_warmup_cosine"]

@@ -1,0 +1,66 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+State is a pytree mirroring the params, so it shards exactly like the
+params under pjit (the dry-run relies on this: optimizer state inherits the
+weight PartitionSpecs).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    mu: PyTree                 # first moment
+    nu: PyTree                 # second moment
+
+
+def adamw_init(params: PyTree) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.zeros_like, zeros))
+
+
+def _global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads: PyTree, state: OptState, params: PyTree,
+                 lr: jnp.ndarray | float, *, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0,
+                 clip_norm: Optional[float] = 1.0
+                 ) -> Tuple[PyTree, OptState]:
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state.step + 1
+    if clip_norm is not None:
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step=step, mu=mu, nu=nu)
+
+
+def sgd_update(grads: PyTree, params: PyTree, lr: float) -> PyTree:
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads)

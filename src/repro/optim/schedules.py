@@ -1,0 +1,33 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1
+                    ) -> Schedule:
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.05) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family (2 layers, d_model<=512, <=4 experts) runs one forward/train
+step on CPU; output shapes asserted, no NaNs. Plus decode-path checks and
+the prefill->decode == train-forward consistency test."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (init_cache, init_model, make_batch, serve_step,
+                          train_loss, model_hidden_train)
+from repro.models.lm import grow_cache, prefill_step
+from repro.optim import adamw_init, adamw_update
+
+REDUCED = {a: get_config(a).reduced() for a in ARCH_IDS}
+
+
+def _enc_len(cfg):
+    return 16 if cfg.encoder_layers else 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = REDUCED[arch]
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, batch=2, seq=64, seed=1)
+
+    @jax.jit
+    def step(p, opt, b):
+        loss, g = jax.value_and_grad(lambda p: train_loss(p, cfg, b))(p)
+        p, opt = adamw_update(g, opt, p, 1e-3)
+        return p, opt, loss
+
+    opt = adamw_init(params)
+    p1, opt, loss1 = step(params, opt, batch)
+    _, _, loss2 = step(p1, opt, batch)
+    assert np.isfinite(float(loss1)) and np.isfinite(float(loss2))
+    assert float(loss2) < float(loss1)          # one step of progress
+    # hidden states have the right shape and are finite
+    h, aux = jax.jit(lambda p, b: model_hidden_train(
+        p, cfg, b["tokens"], b.get("patch_embeds"), b.get("frames")))(
+        params, batch)
+    assert h.shape == (2, 64, cfg.d_model)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = REDUCED[arch]
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, 2, 96, enc_len=_enc_len(cfg))
+    if cfg.encoder_layers:
+        cache["memory"] = jnp.asarray(
+            np.random.default_rng(0).normal(0, 0.02, (2, 16, cfg.d_model)),
+            jnp.dtype(cfg.dtype))
+    tok = jnp.ones((2, 1), jnp.int32)
+    lengths = jnp.zeros((2,), jnp.int32)
+    step = jax.jit(lambda p, t, c, l: serve_step(p, cfg, t, c, l))
+    logits, cache = step(params, tok, cache, lengths)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    # a second token with advanced lengths also works
+    logits2, _ = step(params, tok, cache, lengths + 1)
+    assert bool(jnp.isfinite(logits2).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_train_forward(arch):
+    """Strongest cache-correctness check: running S tokens through prefill
+    then decoding token S must equal the train-forward logits at position S.
+
+    Covers KV caches, MLA compressed caches, ring buffers, SSM states and
+    the chunked-vs-stepwise linear attention math."""
+    import dataclasses
+    cfg = REDUCED[arch]
+    if cfg.num_experts:
+        # decode never drops tokens; make train-side routing drop-free too so
+        # the two paths are comparable (drops are expected MoE semantics)
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    s = 33                                       # odd, crosses chunk edges
+    batch = make_batch(cfg, batch=2, seq=s + 1, seed=3)
+
+    # reference: full forward, logits at position s-1 predict token s
+    h, _ = jax.jit(lambda p, b: model_hidden_train(
+        p, cfg, b["tokens"][:, :s], b.get("patch_embeds"),
+        b.get("frames")))(params, batch)
+    from repro.models.lm import _head_weight, apply_norm
+    ref_logits = (h[:, -1] @ _head_weight(params)).astype(jnp.float32)
+
+    # prefill s-1 tokens, then decode token s-1
+    pre = {"tokens": batch["tokens"][:, :s - 1]}
+    if "patch_embeds" in batch:
+        pre["patch_embeds"] = batch["patch_embeds"]
+    if "frames" in batch:
+        pre["frames"] = batch["frames"]
+    _, cache, lengths = jax.jit(
+        lambda p, b: prefill_step(p, cfg, b))(params, pre)
+    cache = grow_cache(cache, s + 8)
+    tok = batch["tokens"][:, s - 1:s]
+    logits, _ = jax.jit(lambda p, t, c, l: serve_step(p, cfg, t, c, l))(
+        params, tok, cache, lengths)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_router_balance_loss_positive():
+    cfg = REDUCED["qwen2_moe_a2p7b"]
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, batch=2, seq=64)
+    _, aux = jax.jit(lambda p, b: model_hidden_train(p, cfg, b["tokens"]))(
+        params, batch)
+    assert float(aux) >= 0.99   # E * sum(f*P) >= 1 at uniform routing
+
+
+def test_sliding_window_cache_is_ring_buffer():
+    import dataclasses
+    cfg = dataclasses.replace(REDUCED["qwen3_4b"], attention="sliding",
+                              window=16)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    cache = init_cache(cfg, 1, 1024)
+    # ring buffer: cache seq dim == window, not 1024
+    k_shape = jax.tree.leaves(cache["layers"])[0].shape
+    assert 16 in k_shape
+    tok = jnp.ones((1, 1), jnp.int32)
+    step = jax.jit(lambda p, t, c, l: serve_step(p, cfg, t, c, l))
+    lengths = jnp.asarray([40], jnp.int32)       # beyond the window
+    logits, _ = step(params, tok, cache, lengths)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_param_count_sane():
+    """Full configs should land near their nameplate sizes.  (xlstm is
+    excluded: our blocks omit the reference up-projections — documented in
+    DESIGN.md — so the implementation is legitimately ~60M.)"""
+    approx = {
+        "nemotron4_340b": (340e9, 0.15),
+        "deepseek_v2_236b": (236e9, 0.20),
+        "qwen3_4b": (4e9, 0.35),
+        "glm4_9b": (9e9, 0.35),
+        "qwen2_moe_a2p7b": (14.3e9, 0.25),   # total (A2.7B = active)
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).param_count()
+        assert abs(n - target) / target < tol, (arch, n, target)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_formula_matches_init(arch):
+    """config.param_count() (used for MODEL_FLOPS in the roofline) must track
+    the actually-initialized parameter totals."""
+    cfg = REDUCED[arch]
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    predicted = cfg.param_count()
+    if cfg.encoder_layers:        # formula covers the decoder stack only
+        enc = sum(int(np.prod(l.shape)) for l in
+                  jax.tree.leaves(params["encoder"]))
+        actual -= enc
+    assert abs(actual - predicted) / actual < 0.15, (arch, actual, predicted)

@@ -1,0 +1,209 @@
+"""Tests for the paper's core: graph structure, Leiden, Fusion, baselines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Graph, karate_club, leiden, leiden_fusion, fuse,
+                        evaluate_partition, make_arxiv_like,
+                        lpa_partition, metis_partition, random_partition,
+                        with_fusion, split_into_components)
+from repro.core.fusion import community_cuts
+
+
+# ---------------------------------------------------------------------------
+# Graph structure
+# ---------------------------------------------------------------------------
+def test_karate_shape():
+    g = karate_club()
+    assert g.n == 34
+    assert g.m == 78.0
+    assert g.num_components() == 1
+
+
+def test_from_edges_symmetrizes_and_dedups():
+    g = Graph.from_edges(4, [0, 1, 1, 3], [1, 0, 2, 3], [1.0, 2.0, 1.0, 9.0])
+    # (0,1) deduped to weight 3, (1,2) weight 1, self-loop (3,3) dropped
+    assert g.m == 4.0
+    assert set(g.neighbors(1).tolist()) == {0, 2}
+
+
+def test_aggregate_preserves_total_weight_and_degrees():
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    agg = g.aggregate(labels)
+    assert agg.m == pytest.approx(g.m)           # self-loops keep the mass
+    assert agg.degrees().sum() == pytest.approx(g.degrees().sum())
+    assert agg.node_weight.sum() == pytest.approx(g.n)
+
+
+def test_connected_components_masked():
+    g = Graph.from_edges(5, [0, 1, 3], [1, 2, 4], None)
+    assert g.num_components() == 2
+    mask = np.array([True, False, True, True, True])
+    comp = g.connected_components(mask)
+    assert comp[1] == -1
+    assert g.num_components(mask) == 3           # {0}, {2}, {3,4}
+
+
+# ---------------------------------------------------------------------------
+# Leiden
+# ---------------------------------------------------------------------------
+def test_leiden_karate_four_communities():
+    """Paper Fig. 2: Leiden finds 4 communities on the karate club."""
+    labels = leiden(karate_club(), seed=0)
+    assert int(labels.max()) + 1 == 4
+
+
+def test_leiden_communities_connected():
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    for c in range(int(labels.max()) + 1):
+        assert g.num_components(labels == c) == 1
+
+
+def test_leiden_size_cap_respected():
+    g = karate_club()
+    labels = leiden(g, max_community_size=10, seed=0)
+    assert np.bincount(labels).max() <= 10
+
+
+def test_leiden_improves_modularity_over_singletons():
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    two_m = 2 * g.m
+    deg = g.degrees()
+    k = int(labels.max()) + 1
+    src, dst, w = g.arcs()
+    e_c = np.zeros(k)
+    intra = labels[src] == labels[dst]
+    np.add.at(e_c, labels[src[intra]], w[intra] / 2.0)
+    K_c = np.zeros(k)
+    np.add.at(K_c, labels, deg)
+    Q = float((e_c / g.m - (K_c / two_m) ** 2).sum())
+    assert Q > 0.3   # known karate optimum ~0.41; greedy should get close
+
+
+# ---------------------------------------------------------------------------
+# Fusion (Algorithms 1-2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_leiden_fusion_guarantees(k):
+    """Paper's central claim: connected input => each partition is ONE
+    connected component with ZERO isolated nodes, sizes within (1+alpha)."""
+    g = karate_club()
+    labels = leiden_fusion(g, k, alpha=0.5, seed=0)  # loose alpha for n=34
+    assert int(labels.max()) + 1 == k
+    rep = evaluate_partition(g, labels)
+    assert rep.components_per_part == [1] * k
+    assert rep.total_isolated == 0
+
+
+def test_fuse_reaches_exact_k():
+    g = karate_club()
+    start = np.arange(g.n)   # singletons
+    out = fuse(g, start, 5, max_part_size=12)
+    assert int(out.max()) + 1 == 5
+
+
+def test_fuse_respects_cap_when_feasible():
+    g = karate_club()
+    labels = leiden_fusion(g, 2, alpha=0.2, seed=0)
+    sizes = np.bincount(labels)
+    assert sizes.max() <= (g.n / 2) * 1.2 + 1
+
+
+def test_community_cuts_symmetric():
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    cuts = community_cuts(g, labels)
+    for a in cuts:
+        for b, w in cuts[a].items():
+            assert cuts[b][a] == pytest.approx(w)
+
+
+# ---------------------------------------------------------------------------
+# Baselines + "+F"
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fn", [lpa_partition, metis_partition,
+                                random_partition])
+def test_baselines_produce_k_partitions(fn):
+    g = karate_club()
+    labels = fn(g, 2, seed=0)
+    assert set(np.unique(labels)) <= {0, 1}
+
+
+def test_metis_balanced():
+    g = make_arxiv_like(n=2000, seed=3).graph
+    labels = metis_partition(g, 4, seed=0)
+    rep = evaluate_partition(g, labels)
+    assert rep.node_balance < 1.25
+
+
+def test_fusion_fixes_components_of_any_base():
+    """Paper §5.4: +F makes METIS/LPA partitions single-component."""
+    g = make_arxiv_like(n=1500, seed=4).graph
+    for base in (metis_partition, lpa_partition, random_partition):
+        labels = with_fusion(base, g, 4, seed=0)
+        rep = evaluate_partition(g, labels)
+        assert rep.components_per_part == [1, 1, 1, 1], base.__name__
+        assert rep.total_isolated == 0
+
+
+def test_split_into_components():
+    g = Graph.from_edges(6, [0, 2, 4], [1, 3, 5], None)
+    labels = np.array([0, 0, 0, 0, 1, 1])
+    out = split_into_components(g, labels)
+    # partition 0 has two components -> becomes two communities
+    assert len(np.unique(out)) == 3
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis): invariants on random connected graphs
+# ---------------------------------------------------------------------------
+@st.composite
+def connected_graphs(draw):
+    n = draw(st.integers(min_value=8, max_value=60))
+    # random tree guarantees connectivity, plus extra random edges
+    rng_seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(rng_seed)
+    parents = [int(rng.integers(0, i)) for i in range(1, n)]
+    src = list(range(1, n)); dst = parents
+    extra = draw(st.integers(min_value=0, max_value=3 * n))
+    src += [int(x) for x in rng.integers(0, n, extra)]
+    dst += [int(x) for x in rng.integers(0, n, extra)]
+    return Graph.from_edges(n, np.array(src), np.array(dst))
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=connected_graphs(), k=st.integers(min_value=2, max_value=4))
+def test_property_lf_partitions_connected_no_isolated(g, k):
+    """THE paper guarantee, property-tested: for any connected graph, every
+    LF partition is a single connected component with no isolated nodes."""
+    labels = leiden_fusion(g, k, alpha=1.0, seed=0)
+    assert int(labels.max()) + 1 == k
+    rep = evaluate_partition(g, labels)
+    assert rep.max_components == 1
+    assert rep.total_isolated == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=connected_graphs())
+def test_property_leiden_covers_all_nodes(g):
+    labels = leiden(g, seed=1)
+    assert labels.shape == (g.n,)
+    assert (labels >= 0).all()
+    # labels are compact
+    assert set(np.unique(labels)) == set(range(int(labels.max()) + 1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=connected_graphs(), k=st.integers(min_value=2, max_value=4))
+def test_property_fuse_monotone_partition_count(g, k):
+    """fuse() only merges: partition count decreases monotonically to k and
+    every output community is a union of input communities."""
+    start = leiden(g, seed=0)
+    out = fuse(g, start, k, max_part_size=g.n)
+    assert int(out.max()) + 1 == min(k, int(start.max()) + 1)
+    # union property: each input community maps to exactly one output label
+    for c in range(int(start.max()) + 1):
+        assert len(np.unique(out[start == c])) == 1

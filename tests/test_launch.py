@@ -1,0 +1,104 @@
+"""Launch-layer tests on the local (1-device) mesh: build() lowers and
+compiles for every step kind with reduced configs; sharding API contracts.
+
+The production 256/512-device behaviour is covered by the dry-run artifacts
+(benchmarks/artifacts/dryrun) — here we pin the machinery itself."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.launch.steps import build, params_spec
+from repro.models.inputs import InputShape
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+SMALL = {
+    "train": InputShape("train_small", 128, 2, "train"),
+    "prefill": InputShape("prefill_small", 128, 2, "prefill"),
+    "decode": InputShape("decode_small", 256, 2, "decode"),
+}
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "qwen2_moe_a2p7b",
+                                  "xlstm_125m", "seamless_m4t_large_v2"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_build_lowers_and_compiles(mesh, arch, kind):
+    cfg = get_config(arch).reduced()
+    shape_name = {"train": "train_4k", "prefill": "prefill_32k",
+                  "decode": "decode_32k"}[kind]
+    with mesh:
+        fn, sds = build(cfg, shape_name, mesh, shape_override=SMALL[kind])
+        compiled = fn.lower(*sds).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_build_executes_train_step(mesh):
+    """The same build() artifact must run with real arrays (not only SDS)."""
+    from repro.models import init_model, make_batch
+    from repro.optim import adamw_init
+    cfg = get_config("qwen3_4b").reduced()
+    with mesh:
+        fn, sds = build(cfg, "train_4k", mesh, shape_override=SMALL["train"])
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        opt = adamw_init(params)
+        batch = make_batch(cfg, batch=2, seq=128)
+        p2, o2, loss = fn(params, opt, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_mode_validation():
+    from repro.launch.sharding import MODES, _mode_axes
+    m = jax.make_mesh((1, 1), ("data", "model"))
+    for mode in MODES:
+        _mode_axes(m, mode)
+    with pytest.raises(AssertionError):
+        _mode_axes(m, "nonsense")
+
+
+def test_cache_shardings_long_context_seq_sharded():
+    """long_500k (batch 1 < data axis): cache must shard SEQUENCE over data,
+    not batch. Needs a multi-device mesh -> subprocess with 4 host devices."""
+    from tests.test_distributed_gnn import run_with_devices
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.launch.sharding import cache_shardings
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+cache = {"layers": {"k": jax.ShapeDtypeStruct((2, 1, 1024, 8, 64),
+                                              jnp.bfloat16)}}
+sh = cache_shardings(mesh, cache, global_batch=1)
+spec = sh["layers"]["k"].spec
+print("SPEC:", spec[1], "|", spec[2])
+""")
+    assert "SPEC: None | data" in out    # batch unsharded, seq over data
+
+
+def test_depth_pair_respects_block_pattern():
+    import sys
+    sys.modules.pop("repro.launch.dryrun", None)
+    import os
+    os.environ.setdefault("XLA_FLAGS", "")
+    from repro.launch import dryrun
+    zp = get_config("zamba2_1p2b")
+    l1, l2 = dryrun._depth_pair(zp)
+    assert l1 == 6 and l2 == 12          # one / two pattern periods
+    ds = get_config("deepseek_v2_236b")
+    l1, l2 = dryrun._depth_pair(ds)
+    assert l1 == 2 and l2 == 3           # first_k_dense=1 + 1/2 MoE layers
+
+
+def test_effective_config_long500k_variants():
+    from repro.models import effective_config
+    dense = effective_config(get_config("qwen3_4b"), "long_500k")
+    assert dense.attention == "sliding"
+    ssm = effective_config(get_config("xlstm_125m"), "long_500k")
+    assert ssm.attention == "full"       # untouched: no attn blocks
+    hyb = effective_config(get_config("zamba2_1p2b"), "long_500k")
+    assert hyb.attention == "sliding"    # shared attn blocks get the window

@@ -1,0 +1,225 @@
+"""Mathematical invariants of the model components:
+- chunked attention == naive full attention
+- chunked linear attention == sequential recurrence (any chunk size)
+- MoE sort-based dispatch == dense per-token expert evaluation
+- RoPE preserves norms and relative positions
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import _attend_chunked
+from repro.models.ssm import chunked_linear_attention, linear_attention_step
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _naive_attention(q, k, v, causal, window=None):
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(dh)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+
+
+@pytest.mark.parametrize("sq,causal,window,g", [
+    (64, True, None, 1),
+    (300, True, None, 2),     # uneven chunks (Q_CHUNK=512 > sq: single)
+    (600, True, None, 4),     # crosses a chunk boundary
+    (600, False, None, 1),
+    (600, True, 128, 2),      # sliding window
+])
+def test_chunked_attention_matches_naive(sq, causal, window, g):
+    rng = np.random.default_rng(sq + g)
+    b, hkv, dh = 2, 2, 16
+    h = hkv * g
+    q = jnp.asarray(rng.normal(size=(b, sq, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, sq, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, sq, hkv, dh)), jnp.float32)
+    out = _attend_chunked(q, k, v, causal, window)
+    ref = _naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_unroll_identical():
+    rng = np.random.default_rng(0)
+    b, s, h, dh = 1, 600, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    a = _attend_chunked(q, k, v, True, None, unroll=False)
+    c = _attend_chunked(q, k, v, True, None, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# chunked linear attention (mLSTM / Mamba2 SSD core)
+# ---------------------------------------------------------------------------
+def _sequential_linear_attention(q, k, v, log_decay):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    S = jnp.zeros((b, h, dk, dv))
+    n = jnp.zeros((b, h, dk))
+    ys, ns = [], []
+    for t in range(s):
+        y, S, n = linear_attention_step(q[:, t], k[:, t], v[:, t],
+                                        log_decay[:, t], S, n)
+        ys.append(y)
+        ns.append(n)
+    return jnp.stack(ys, 1), S, jnp.stack(ns, 1)
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (17, 4), (32, 32), (10, 64)])
+def test_chunked_linear_attention_matches_sequential(s, chunk):
+    rng = np.random.default_rng(s * 31 + chunk)
+    b, h, dk, dv = 2, 3, 5, 7
+    q = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dv)), jnp.float32)
+    ld = jnp.asarray(-rng.random((b, s, h)), jnp.float32)   # log decay <= 0
+    y, S, n = chunked_linear_attention(q, k, v, ld, None, chunk)
+    y_ref, S_ref, n_ref = _sequential_linear_attention(q, k, v, ld)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_linear_attention_state_handoff():
+    """Processing [first half] then [second half with carried state] must
+    equal processing the whole sequence."""
+    rng = np.random.default_rng(5)
+    b, s, h, dk, dv, chunk = 1, 24, 2, 4, 4, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dv)), jnp.float32)
+    ld = jnp.asarray(-rng.random((b, s, h)), jnp.float32)
+    y_full, S_full, _ = chunked_linear_attention(q, k, v, ld, None, chunk)
+    y1, S1, n1 = chunked_linear_attention(q[:, :12], k[:, :12], v[:, :12],
+                                          ld[:, :12], None, chunk)
+    y2, S2, _ = chunked_linear_attention(q[:, 12:], k[:, 12:], v[:, 12:],
+                                         ld[:, 12:], S1, chunk,
+                                         norm_state=n1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(2, 40),
+       chunk=st.integers(1, 16))
+def test_property_chunked_linear_attention(seed, s, chunk):
+    rng = np.random.default_rng(seed)
+    b, h, dk, dv = 1, 2, 3, 3
+    q = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dv)), jnp.float32)
+    ld = jnp.asarray(-rng.random((b, s, h)) * 2, jnp.float32)
+    y, _, _ = chunked_linear_attention(q, k, v, ld, None, chunk)
+    y_ref, _, _ = _sequential_linear_attention(q, k, v, ld)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+def test_moe_dispatch_matches_dense_reference():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.moe import init_moe, moe_forward
+    cfg = dataclasses.replace(get_config("qwen2_moe_a2p7b").reduced(),
+                              capacity_factor=100.0)   # no drops
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 9, cfg.d_model)), jnp.float32)
+    out, _ = moe_forward(p, cfg, x)
+
+    # dense reference: evaluate every expert on every token
+    xf = x.reshape(-1, cfg.d_model)
+    probs = jax.nn.softmax(xf @ p["router"], -1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xf)
+    for e in range(cfg.num_experts):
+        h = jax.nn.silu(xf @ p["w_gate"][e]) * (xf @ p["w_up"][e])
+        y = h @ p["w_out"][e]
+        w = ((idx == e) * gate).sum(-1)
+        ref += y * w[:, None]
+    from repro.models.layers import ffn_forward
+    for sp in p.get("shared", []):
+        ref += ffn_forward(sp, cfg, xf)
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_tokens():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.moe import init_moe, moe_forward
+    cfg = dataclasses.replace(get_config("qwen2_moe_a2p7b").reduced(),
+                              capacity_factor=0.05, num_shared_experts=0)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 32, cfg.d_model)),
+                    jnp.float32)
+    out, _ = moe_forward(p, cfg, x)
+    # with tiny capacity most tokens are dropped -> many zero rows
+    norms = jnp.linalg.norm(out.reshape(-1, cfg.d_model), axis=-1)
+    assert float((norms == 0).mean()) > 0.3
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def test_rope_preserves_norm_and_relative_dot():
+    from repro.models.config import ModelConfig
+    from repro.models.layers import apply_rope
+    cfg = ModelConfig(name="t", arch_type="dense", num_layers=1, d_model=64,
+                      num_heads=1, num_kv_heads=1, d_ff=1, vocab_size=10)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 8, 1, 64)), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    r = apply_rope(x, pos, cfg)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+    dots = []
+    for p0 in (0, 5):
+        qr = apply_rope(q, jnp.asarray([[p0]]), cfg)
+        kr = apply_rope(k, jnp.asarray([[p0 + 3]]), cfg)
+        dots.append(float(jnp.sum(qr * kr)))
+    assert abs(dots[0] - dots[1]) < 1e-4
+
+
+def test_partial_rope_rotates_half():
+    import dataclasses
+    from repro.models.config import ModelConfig
+    from repro.models.layers import apply_rope
+    cfg = ModelConfig(name="t", arch_type="dense", num_layers=1, d_model=64,
+                      num_heads=1, num_kv_heads=1, d_ff=1, vocab_size=10,
+                      rope_fraction=0.5)
+    x = jnp.ones((1, 4, 1, 64), jnp.float32)
+    r = apply_rope(x, jnp.arange(4)[None], cfg)
+    # unrotated second half unchanged
+    np.testing.assert_array_equal(np.asarray(r[..., 32:]),
+                                  np.ones((1, 4, 1, 32)))
+    assert not np.allclose(np.asarray(r[:, 1:, :, :32]), 1.0)

@@ -1,0 +1,209 @@
+"""Unit tests: optimizer, schedules, checkpointing, HLO analysis, sharding
+rules, expert placement."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.optim import (adamw_init, adamw_update, constant_schedule,
+                         cosine_schedule, linear_warmup_cosine)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2)
+
+    p = params
+    for _ in range(300):
+        g = jax.grad(loss_fn)(p)
+        p, opt = adamw_update(g, opt, p, lr=0.1)
+    assert float(loss_fn(p)) < 1e-3
+
+
+def test_adamw_weight_decay_shrinks():
+    p = {"w": jnp.ones((4,))}
+    opt = adamw_init(p)
+    g = {"w": jnp.zeros((4,))}
+    p2, _ = adamw_update(g, opt, p, lr=0.1, weight_decay=0.5)
+    assert float(p2["w"][0]) < 1.0
+
+
+def test_grad_clipping_bounds_update():
+    p = {"w": jnp.zeros((2,))}
+    opt = adamw_init(p)
+    g = {"w": jnp.asarray([1e9, 1e9])}
+    p2, _ = adamw_update(g, opt, p, lr=0.1, clip_norm=1.0)
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_schedules_shapes():
+    for sched, checks in [
+        (constant_schedule(1e-3), [(0, 1e-3), (100, 1e-3)]),
+        (cosine_schedule(1.0, 100), [(0, 1.0), (100, 0.1)]),
+        (linear_warmup_cosine(1.0, 10, 100), [(0, 0.0), (10, 1.0)]),
+    ]:
+        for step, expect in checks:
+            got = float(sched(jnp.asarray(step)))
+            assert abs(got - expect) < 0.05, (step, got, expect)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": [jnp.ones(4), {"c": jnp.zeros(())}]}
+    save_checkpoint(str(tmp_path), 3, tree)
+    save_checkpoint(str(tmp_path), 7, jax.tree.map(lambda x: x + 1, tree))
+    assert latest_step(str(tmp_path)) == 7
+    out = restore_checkpoint(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.arange(6).reshape(2, 3) + 1)
+    # wrong shape rejected
+    bad = {"a": jnp.zeros((9, 9)), "b": tree["b"]}
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis
+# ---------------------------------------------------------------------------
+def test_collective_bytes_parses_ops():
+    from repro.launch.hlo_analysis import collective_bytes
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(f32[1,128]{1,0} %x), dimensions={0}
+  %ar.1 = bf16[256]{0} all-reduce(bf16[256]{0} %y), to_apply=%add
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %z), source_target_pairs={{0,1}}
+  %t = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(f32[4,4]{1,0} %a, f32[4,4]{1,0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 128 * 4
+    assert out["all-reduce"] == 256 * 2
+    assert out["collective-permute"] == 8 * 4
+    assert out["all-to-all"] == 2 * 16 * 4
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "all-to-all",
+                                "collective-permute", "reduce-scatter"))
+
+
+def test_collective_bytes_ignores_done_halves():
+    from repro.launch.hlo_analysis import collective_bytes
+    hlo = """
+  %ags = f32[64]{0} all-gather-start(f32[4]{0} %x)
+  %agd = f32[64]{0} all-gather-done(f32[64]{0} %ags)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 64 * 4          # counted once
+
+
+def test_roofline_terms_dominance():
+    from repro.launch.hlo_analysis import roofline_terms
+    t = roofline_terms(flops=197e12, hbm_bytes=0, coll_bytes=0, chips=1)
+    assert t["dominant"] == "compute" and abs(t["compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(flops=0, hbm_bytes=819e9, coll_bytes=0, chips=1)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(flops=0, hbm_bytes=0, coll_bytes=50e9, chips=1)
+    assert t["dominant"] == "collective" and abs(t["collective_s"] - 1) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (structure only; multi-device behaviour is covered by the
+# dry-run and tests/test_distributed_gnn.py)
+# ---------------------------------------------------------------------------
+def test_param_shardings_divisibility_guard():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import _guard
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 4}
+    fm = FakeMesh()
+    assert _guard(fm, P("model"), (32,)) == P("model")
+    assert _guard(fm, P("model"), (30,)) == P(None)
+    assert _guard(fm, P(("data",)), (8,)) == P(("data",))
+
+
+def test_param_shardings_rules_applied():
+    from repro.configs import get_config
+    from repro.launch.sharding import param_shardings
+    from repro.launch.steps import params_spec
+    cfg = get_config("qwen3_4b")
+    # single-device mesh named like production axes
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sds = params_spec(cfg)
+    sh = param_shardings(mesh, sds, "dp_tp")
+    flat = jax.tree_util.tree_flatten_with_path(sh)[0]
+    by_name = {"/".join(str(getattr(p, 'key', getattr(p, 'idx', '?')))
+                        for p in path): s.spec for path, s in flat}
+    assert by_name["embed"][0] == "model"
+    assert by_name["layers/attn/wq"][-1] == "model"
+    assert by_name["layers/ffn/w_gate"][-1] == "model"
+    assert by_name["layers/ffn/w_out"][-2] == "model"
+
+
+def test_moe_expert_axis_sharded():
+    from repro.configs import get_config
+    from repro.launch.sharding import param_shardings
+    from repro.launch.steps import params_spec
+    cfg = get_config("qwen2_moe_a2p7b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sds = params_spec(cfg)
+    sh = param_shardings(mesh, sds, "dp_tp")
+    flat = jax.tree_util.tree_flatten_with_path(sh)[0]
+    for path, s in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", "?")))
+                        for p in path)
+        if name == "layers/ffn/w_gate":        # [L, E, d, f]
+            assert s.spec[1] == "model", s.spec   # expert-parallel
+            return
+    raise AssertionError("moe stack not found")
+
+
+# ---------------------------------------------------------------------------
+# expert placement (beyond-paper)
+# ---------------------------------------------------------------------------
+def test_lf_expert_placement_balanced_and_better():
+    from repro.core.expert_placement import (contiguous_placement,
+                                             lf_expert_placement,
+                                             placement_cost)
+    rng = np.random.default_rng(0)
+    num_experts, shards, k = 16, 4, 2
+    # clustered router: tokens pick both experts from one random block of 4
+    blocks = np.arange(num_experts).reshape(4, 4)
+    # scatter blocks so contiguous placement is wrong
+    rng.shuffle(blocks.reshape(-1))
+    trace = np.zeros((4000, k), dtype=np.int64)
+    for t in range(4000):
+        b = blocks[rng.integers(4)]
+        trace[t] = rng.choice(b, size=k, replace=False)
+    lf = lf_expert_placement(trace, num_experts, shards)
+    assert np.bincount(lf, minlength=shards).tolist() == [4, 4, 4, 4]
+    naive = contiguous_placement(num_experts, shards)
+    c_lf = placement_cost(trace, lf)["mean_shards_per_token"]
+    c_naive = placement_cost(trace, naive)["mean_shards_per_token"]
+    assert c_lf <= c_naive
+    assert c_lf < 1.1       # LF should recover the planted blocks
+
+
+def test_apply_placement_permutes_experts():
+    from repro.core.expert_placement import apply_placement_to_params
+    e, d, f = 6, 4, 8
+    params = {"router": np.arange(d * e).reshape(d, e).astype(np.float32),
+              "w_gate": np.arange(e * d * f).reshape(e, d, f).astype(
+                  np.float32)}
+    placement = np.array([1, 0, 1, 0, 1, 0])
+    out, perm = apply_placement_to_params(params, placement)
+    # experts of shard 0 come first
+    assert (placement[perm] == np.array([0, 0, 0, 1, 1, 1])).all()
+    np.testing.assert_array_equal(out["w_gate"][0], params["w_gate"][perm[0]])
+    np.testing.assert_array_equal(out["router"][:, 0],
+                                  params["router"][:, perm[0]])

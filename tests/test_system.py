@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests for the paper's system: the full
+partition -> local-train -> pool -> classify pipeline, and the CLI drivers."""
+import json
+import subprocess
+import sys
+import os
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_full_paper_pipeline_beats_raw_features():
+    """LF + local GNN training + pooled classifier must clearly beat an MLP
+    on raw features (the GNN aggregation is doing the work), while training
+    each partition independently."""
+    from repro.core import (build_partition_batch, evaluate_partition,
+                            leiden_fusion, make_arxiv_like)
+    from repro.gnn import GNNConfig, train_classifier, train_local
+    ds = make_arxiv_like(n=1500, feature_dim=32, num_classes=8, seed=11)
+    raw = train_classifier(ds, ds.features, epochs=80)
+
+    labels = leiden_fusion(ds.graph, 4)
+    rep = evaluate_partition(ds.graph, labels)
+    assert rep.max_components == 1 and rep.total_isolated == 0
+    batch = build_partition_batch(ds.graph, labels, scheme="repli")
+    cfg = GNNConfig(kind="gcn", feature_dim=32, hidden_dim=48, embed_dim=48,
+                    num_layers=3, dropout=0.2)
+    _, emb = train_local(ds, batch, cfg, epochs=40, lr=5e-3)
+    res = train_classifier(ds, emb, epochs=80)
+    assert res["test"] > raw["test"] + 0.2, (res, raw)
+
+
+def _run_cli(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, env=env, timeout=timeout, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_train_cli_gnn():
+    out = _run_cli(["repro.launch.train", "--workload", "gnn",
+                    "--nodes", "800", "--k", "2", "--epochs", "8",
+                    "--hidden", "32"])
+    rec = json.loads(out)
+    assert rec["partition_quality"]["total_isolated"] == 0
+    assert rec["partition_quality"]["max_components"] == 1
+    assert 0 <= rec["results"]["test"] <= 1
+
+
+def test_train_cli_lm():
+    out = _run_cli(["repro.launch.train", "--workload", "lm",
+                    "--arch", "xlstm_125m", "--reduced", "--steps", "4",
+                    "--batch", "2", "--seq", "32"])
+    rec = json.loads(out)
+    assert rec["last_loss"] < rec["first_loss"]
+
+
+def test_serve_cli():
+    out = _run_cli(["repro.launch.serve", "--arch", "qwen3_4b", "--reduced",
+                    "--requests", "2", "--max-new", "4",
+                    "--max-prompt", "12"])
+    rec = json.loads(out)
+    assert rec["finite"] is True
+    assert len(rec["sample_generation"]) >= 4
+
+
+def test_checkpoint_roundtrip_via_cli(tmp_path):
+    _run_cli(["repro.launch.train", "--workload", "lm", "--arch",
+              "xlstm_125m", "--reduced", "--steps", "2", "--batch", "2",
+              "--seq", "32", "--ckpt-dir", str(tmp_path)])
+    from repro.checkpoint import latest_step
+    assert latest_step(str(tmp_path)) == 2
