@@ -1,31 +1,32 @@
 """Paper Fig 6a/6b (GCN/SAGE accuracy on Arxiv, Inner vs Repli) and Table 2
-(SAGE ROC-AUC on the dense Proteins graph, Inner only)."""
+(SAGE ROC-AUC on the dense Proteins graph, Inner only).
+
+Runs through ``repro.pipeline`` with the shared benchmark partition cache,
+so each (method, k, seed) is partitioned exactly once across the whole
+model/scheme grid."""
 from __future__ import annotations
 
-from .common import arxiv_like, emit, proteins_like
+from .common import arxiv_like, emit, partition_store, proteins_like
+
+
+def _pipeline_config(method, k, scheme, model, epochs, seed=0):
+    from repro.pipeline import PipelineConfig
+    return PipelineConfig(
+        method=method, k=k, seed=seed, scheme=scheme, mode="local",
+        model=model, hidden_dim=128, embed_dim=128, num_layers=3,
+        dropout=0.3, epochs=epochs, lr=5e-3, classifier_epochs=120,
+        collect_hlo=False)
 
 
 def _run_one(ds, method, k, scheme, model, epochs, seed=0):
-    from repro.core import PARTITIONERS, build_partition_batch
-    from repro.gnn import GNNConfig, train_classifier, train_local
-    labels = PARTITIONERS[method](ds.graph, k, seed=seed)
-    batch = build_partition_batch(ds.graph, labels, scheme=scheme)
-    cfg = GNNConfig(kind=model, feature_dim=ds.features.shape[1],
-                    hidden_dim=128, embed_dim=128, num_layers=3, dropout=0.3)
-    _, emb = train_local(ds, batch, cfg, epochs=epochs, lr=5e-3, seed=seed)
-    return train_classifier(ds, emb, epochs=120, seed=seed)
+    from repro.pipeline import Pipeline
+    cfg = _pipeline_config(method, k, scheme, model, epochs, seed)
+    report = Pipeline(cfg, store=partition_store()).run(ds)
+    return report.accuracy
 
 
 def centralized_reference(ds, model, epochs, seed=0):
-    import numpy as np
-    from repro.core import build_partition_batch
-    from repro.gnn import GNNConfig, train_classifier, train_local
-    labels = np.zeros(ds.graph.n, dtype=np.int64)
-    batch = build_partition_batch(ds.graph, labels, scheme="inner")
-    cfg = GNNConfig(kind=model, feature_dim=ds.features.shape[1],
-                    hidden_dim=128, embed_dim=128, num_layers=3, dropout=0.3)
-    _, emb = train_local(ds, batch, cfg, epochs=epochs, lr=5e-3, seed=seed)
-    return train_classifier(ds, emb, epochs=120, seed=seed)
+    return _run_one(ds, "single", 1, "inner", model, epochs, seed)
 
 
 def run(fast: bool = True, dataset: str = "arxiv_like"):

@@ -10,6 +10,16 @@ from typing import Dict, List
 import numpy as np
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+PARTITION_CACHE = os.path.join(ARTIFACTS, "partition_cache")
+
+
+@functools.lru_cache(maxsize=1)
+def partition_store():
+    """Shared partition artifact store: every benchmark module reuses the
+    same cached partitions (a grid over model/scheme/epochs partitions each
+    (method, k, seed) exactly once)."""
+    from repro.pipeline import PartitionArtifactStore
+    return PartitionArtifactStore(PARTITION_CACHE)
 
 
 def emit(table: str, rows: List[Dict], keys: List[str] | None = None) -> None:

@@ -2,35 +2,33 @@
 
 The paper's claim: because LF training is communication-free, the wall time
 of the slowest partition drops steeply with k (vs synchronized frameworks
-where communication keeps it flat). We measure per-partition step time for
-the LF scheme, plus the synchronized halo-exchange baseline's collective
-bytes per step from its lowered HLO (the cost DGL-style training pays)."""
+where communication keeps it flat). Runs through ``repro.pipeline`` (shared
+partition cache, classifier stage skipped) and reads the train-stage timing
+from the PipelineReport."""
 from __future__ import annotations
 
-import time
-
-from .common import arxiv_like, emit
+from .common import arxiv_like, emit, partition_store
 
 
 def run(fast: bool = True):
-    import jax
-    import jax.numpy as jnp
-    from repro.core import (build_partition_batch, leiden_fusion)
-    from repro.gnn import GNNConfig, train_local
+    from repro.pipeline import Pipeline, PipelineConfig
     ds = arxiv_like()
     ks = (2, 8, 16) if fast else (2, 4, 8, 16)
     epochs = 15
     rows = []
     for k in ks:
-        labels = leiden_fusion(ds.graph, k, seed=0)
         for scheme in ("inner", "repli"):
-            batch = build_partition_batch(ds.graph, labels, scheme=scheme)
-            cfg = GNNConfig(kind="gcn", feature_dim=ds.features.shape[1],
-                            hidden_dim=128, embed_dim=128, num_layers=3,
-                            dropout=0.0)
-            t0 = time.time()
-            train_local(ds, batch, cfg, epochs=epochs, lr=5e-3)
-            total = time.time() - t0
+            cfg = PipelineConfig(
+                method="leiden_fusion", k=k, seed=0, scheme=scheme,
+                mode="local", model="gcn", hidden_dim=128, embed_dim=128,
+                num_layers=3, dropout=0.0, epochs=epochs, lr=5e-3,
+                classifier_epochs=0,          # timing only
+                collect_hlo=False,
+                # unsharded: the per_machine_s = wall/k math below assumes
+                # the k partitions train sequentially on ONE device
+                shard_data_axis=False)
+            report = Pipeline(cfg, store=partition_store()).run(ds)
+            total = report.timings["train"]
             rows.append({"k": k, "scheme": scheme, "epochs": epochs,
                          "wall_s": round(total, 2),
                          # on k real machines each trains ONLY its own
@@ -38,7 +36,8 @@ def run(fast: bool = True):
                          # zero-collective HLO), so per-machine time is the
                          # sequential wall divided by k:
                          "per_machine_s": round(total / k, 2),
-                         "n_pad": batch.n_pad, "e_pad": batch.e_pad})
+                         "n_pad": report.shapes["n_pad"],
+                         "e_pad": report.shapes["e_pad"]})
     emit("fig7_training_time", rows)
     return rows
 

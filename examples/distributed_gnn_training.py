@@ -1,19 +1,18 @@
 """End-to-end driver (paper pipeline at benchmark scale).
 
-Reproduces the paper's core experiment: the same GNN trained on partitions
-from different partitioning methods, Inner vs Repli, versus the centralized
-reference — showing LF preserves accuracy while training fully locally.
+Reproduces the paper's core experiment through `repro.pipeline`: the same
+GNN trained on partitions from different partitioning methods, Inner vs
+Repli, versus the centralized reference — showing LF preserves accuracy
+while training fully locally. Partitions are cached, so the two schemes
+(and any rerun) reuse each method's partitioning.
 
     PYTHONPATH=src python examples/distributed_gnn_training.py --k 8
 """
 import argparse
-import time
+import os
 
-import numpy as np
-
-from repro.core import (PARTITIONERS, build_partition_batch,
-                        evaluate_partition, make_arxiv_like)
-from repro.gnn import GNNConfig, train_classifier, train_local
+from repro.core import make_arxiv_like
+from repro.pipeline import Pipeline, PipelineConfig
 
 
 def main():
@@ -22,32 +21,37 @@ def main():
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--epochs", type=int, default=50)
     ap.add_argument("--model", choices=["gcn", "sage"], default="gcn")
+    ap.add_argument("--cache-dir", default=None,
+                    help="partition cache (default: ~/.cache/repro/examples)")
     args = ap.parse_args()
 
+    cache = args.cache_dir or os.path.expanduser(
+        os.path.join("~", ".cache", "repro", "examples"))
     ds = make_arxiv_like(n=args.nodes)
-    cfg = GNNConfig(kind=args.model, feature_dim=ds.features.shape[1],
-                    hidden_dim=128, embed_dim=128, num_layers=3, dropout=0.3)
 
-    # centralized reference (k=1)
-    ref_batch = build_partition_batch(
-        ds.graph, np.zeros(ds.graph.n, dtype=np.int64), scheme="inner")
-    _, ref_emb = train_local(ds, ref_batch, cfg, epochs=args.epochs, lr=5e-3)
-    ref = train_classifier(ds, ref_emb, epochs=120)
-    print(f"centralized: test={ref['test']:.3f}")
+    def run(method, k, scheme):
+        cfg = PipelineConfig(method=method, k=k, scheme=scheme,
+                             mode="local", model=args.model, hidden_dim=128,
+                             embed_dim=128, num_layers=3, dropout=0.3,
+                             epochs=args.epochs, lr=5e-3,
+                             classifier_epochs=120, cache_dir=cache,
+                             collect_hlo=False)
+        return Pipeline(cfg).run(ds)
+
+    ref = run("single", 1, "inner")
+    print(f"centralized: test={ref.accuracy['test']:.3f}")
 
     for method in ("leiden_fusion", "metis", "lpa", "random"):
-        labels = PARTITIONERS[method](ds.graph, args.k, seed=0)
-        rep = evaluate_partition(ds.graph, labels)
         for scheme in ("inner", "repli"):
-            batch = build_partition_batch(ds.graph, labels, scheme=scheme)
-            t0 = time.time()
-            _, emb = train_local(ds, batch, cfg, epochs=args.epochs, lr=5e-3)
-            res = train_classifier(ds, emb, epochs=120)
+            rep = run(method, args.k, scheme)
+            p = rep.partition
+            cached = "cached" if rep.partition_cache_hit else "fresh "
             print(f"{method:14s} k={args.k} {scheme:5s}: "
-                  f"test={res['test']:.3f} "
-                  f"(cut={rep.edge_cut_pct:.1f}% "
-                  f"comps={rep.total_components} "
-                  f"iso={rep.total_isolated}, {time.time()-t0:.0f}s)")
+                  f"test={rep.accuracy['test']:.3f} "
+                  f"(cut={p['edge_cut_pct']:.1f}% "
+                  f"comps={p['total_components']} "
+                  f"iso={p['total_isolated']}, partition {cached}, "
+                  f"train {rep.timings['train']:.0f}s)")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,23 @@
 """Quickstart: Leiden-Fusion in 30 seconds.
 
-Partitions the Zachary karate club and a synthetic citation graph, prints
-the paper's quality metrics, then runs the full local-training pipeline on a
-small graph.
+Partitions the Zachary karate club, prints the paper's quality metrics, then
+runs the full pipeline (partition -> communication-free local training ->
+embedding assembly -> classifier) through `repro.pipeline` — the same code
+path as `python -m repro.pipeline run`.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+import tempfile
 
-from repro.core import (build_partition_batch, evaluate_partition,
-                        karate_club, leiden_fusion, make_arxiv_like,
-                        metis_partition)
-from repro.gnn import GNNConfig, train_classifier, train_local
+from repro.core import evaluate_partition, karate_club, leiden_fusion, \
+    metis_partition, make_arxiv_like
+from repro.pipeline import Pipeline, PipelineConfig
 
 
 def main():
     # --- 1. the paper's Figure 2: karate club, k=2 -------------------------
     g = karate_club()
-    labels = leiden_fusion(g, k=2)
-    rep = evaluate_partition(g, labels)
+    rep = evaluate_partition(g, leiden_fusion(g, k=2))
     print("karate k=2:", rep.as_dict())
     assert rep.max_components == 1 and rep.total_isolated == 0
 
@@ -31,15 +30,22 @@ def main():
               f"components={rep.total_components:3d} "
               f"isolated={rep.total_isolated}")
 
-    # --- 3. the paper's pipeline: partition -> local GNNs -> classifier ----
-    labels = leiden_fusion(ds.graph, 4)
-    batch = build_partition_batch(ds.graph, labels, scheme="repli")
-    cfg = GNNConfig(kind="gcn", feature_dim=64, hidden_dim=64, embed_dim=64,
-                    num_layers=3, dropout=0.3)
-    _, embeddings = train_local(ds, batch, cfg, epochs=30, lr=5e-3)
-    res = train_classifier(ds, embeddings, epochs=100)
-    print(f"LF k=4 Repli: test accuracy {res['test']:.3f} "
-          f"(trained with ZERO inter-partition communication)")
+    # --- 3. the full pipeline, with the partition artifact cached ----------
+    with tempfile.TemporaryDirectory() as cache:
+        cfg = PipelineConfig(dataset="arxiv-like",
+                             dataset_kwargs={"n": 3000, "feature_dim": 64},
+                             method="leiden_fusion", k=4, scheme="repli",
+                             mode="local", model="gcn", hidden_dim=64,
+                             embed_dim=64, epochs=30, lr=5e-3,
+                             classifier_epochs=100, cache_dir=cache)
+        report = Pipeline(cfg).run(ds)
+        print(report.summary())
+        assert report.collectives["total"] == 0   # zero communication
+        # second run: the partition artifact is loaded, not recomputed
+        report2 = Pipeline(cfg).run(ds)
+        assert report2.partition_cache_hit
+        print("second run: partition served from cache "
+              f"(test acc {report2.accuracy['test']:.3f})")
 
 
 if __name__ == "__main__":

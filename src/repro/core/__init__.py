@@ -3,7 +3,8 @@ from .graph import Graph, NodeDataset, karate_club, make_arxiv_like, make_protei
 from .leiden import leiden
 from .fusion import fuse, leiden_fusion, community_cuts
 from .partitioners import (PARTITIONERS, get_partitioner, lpa_partition,
-                           metis_partition, random_partition, with_fusion,
+                           metis_partition, random_partition,
+                           single_partition, with_fusion,
                            split_into_components)
 from .metrics import PartitionReport, evaluate_partition
 from .assemble import (PartitionBatch, HaloExchangeSpec,
@@ -13,7 +14,8 @@ __all__ = [
     "Graph", "NodeDataset", "karate_club", "make_arxiv_like",
     "make_proteins_like", "leiden", "fuse", "leiden_fusion", "community_cuts",
     "PARTITIONERS", "get_partitioner", "lpa_partition", "metis_partition",
-    "random_partition", "with_fusion", "split_into_components",
+    "random_partition", "single_partition", "with_fusion",
+    "split_into_components",
     "PartitionReport", "evaluate_partition", "PartitionBatch",
     "HaloExchangeSpec", "build_partition_batch", "build_halo_exchange",
 ]

@@ -23,13 +23,19 @@ import numpy as np
 from .fusion import fuse, leiden_fusion
 from .graph import Graph
 
-__all__ = ["random_partition", "lpa_partition", "metis_partition",
-           "leiden_fusion", "with_fusion", "get_partitioner", "PARTITIONERS"]
+__all__ = ["random_partition", "single_partition", "lpa_partition",
+           "metis_partition", "leiden_fusion", "with_fusion",
+           "get_partitioner", "PARTITIONERS"]
 
 
 def random_partition(g: Graph, k: int, seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
     return rng.integers(0, k, g.n).astype(np.int64)
+
+
+def single_partition(g: Graph, k: int = 1, seed: int = 0) -> np.ndarray:
+    """Everything in one partition — the centralized reference (k ignored)."""
+    return np.zeros(g.n, dtype=np.int64)
 
 
 def lpa_partition(g: Graph, k: int, seed: int = 0, max_iter: int = 50,
@@ -236,6 +242,7 @@ def with_fusion(base: Callable[..., np.ndarray], g: Graph, k: int,
 
 
 PARTITIONERS: Dict[str, Callable[..., np.ndarray]] = {
+    "single": single_partition,
     "random": random_partition,
     "lpa": lpa_partition,
     "metis": metis_partition,

@@ -3,12 +3,12 @@ from .model import GNNConfig, gnn_forward, init_gnn, init_mlp, mlp_forward
 from .train import (PartitionTensors, gather_partition_tensors,
                     init_partition_models, make_local_train_step,
                     make_sync_train_step, make_sync_forward, train_local,
-                    train_classifier, compute_embeddings, pool_embeddings,
-                    mean_rocauc)
+                    train_sync, train_classifier, compute_embeddings,
+                    pool_embeddings, mean_rocauc)
 
 __all__ = ["GNNConfig", "gnn_forward", "init_gnn", "init_mlp", "mlp_forward",
            "PartitionTensors", "gather_partition_tensors",
            "init_partition_models", "make_local_train_step",
            "make_sync_train_step", "make_sync_forward", "train_local",
-           "train_classifier", "compute_embeddings", "pool_embeddings",
-           "mean_rocauc"]
+           "train_sync", "train_classifier", "compute_embeddings",
+           "pool_embeddings", "mean_rocauc"]

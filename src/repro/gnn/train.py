@@ -138,8 +138,15 @@ def make_local_train_step(cfg: GNNConfig, multilabel: bool, lr: float = 1e-2
 
 def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
                 epochs: int = 60, lr: float = 1e-2, seed: int = 0,
-                mesh: Optional[Mesh] = None) -> Tuple[PyTree, np.ndarray]:
-    """Paper's local training. Returns (params, global_embeddings [n, E])."""
+                mesh: Optional[Mesh] = None,
+                hlo_out: Optional[Dict[str, str]] = None
+                ) -> Tuple[PyTree, np.ndarray]:
+    """Paper's local training. Returns (params, global_embeddings [n, E]).
+
+    When ``hlo_out`` is given, the optimized (post-SPMD) HLO of the train
+    step is stored under ``hlo_out["hlo"]`` so callers (the pipeline report,
+    the roofline benchmark) can count collective bytes — for this mode the
+    count is zero, which is the paper's claim."""
     pt = gather_partition_tensors(ds, batch)
     k = batch.k
     num_out = ds.num_classes
@@ -155,6 +162,15 @@ def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
                        out_shardings=(shard, shard, shard))
     else:
         step = jax.jit(step)
+
+    if hlo_out is not None:
+        # AOT-compile once and reuse the executable for stepping — the AOT
+        # path does not populate the jit cache, so calling `step` afterwards
+        # would compile a second time.
+        keys0 = jax.random.split(jax.random.fold_in(key, 0), k)
+        compiled = step.lower(params, opt, tensors, keys0).compile()
+        hlo_out["hlo"] = compiled.as_text()
+        step = compiled
 
     for e in range(epochs):
         keys = jax.random.split(jax.random.fold_in(key, e), k)
@@ -256,6 +272,55 @@ def make_sync_train_step(cfg: GNNConfig, halo: HaloExchangeSpec,
                      in_specs=(pspec, pspec, pspec),
                      out_specs=(pspec, pspec, pspec))
     return jax.jit(step)
+
+
+def train_sync(ds: NodeDataset, batch: PartitionBatch,
+               halo: HaloExchangeSpec, cfg: GNNConfig, mesh: Mesh,
+               epochs: int = 60, lr: float = 1e-2, seed: int = 0,
+               hlo_out: Optional[Dict[str, str]] = None
+               ) -> Tuple[PyTree, np.ndarray]:
+    """DGL-style synchronized baseline, mirroring :func:`train_local`.
+
+    Requires a mesh whose ``data`` axis size equals the partition count
+    (one partition per device); every layer refreshes halo activations via
+    an all_gather, which is exactly the traffic Leiden-Fusion eliminates.
+    Returns (params, global_embeddings [n, E])."""
+    from jax.experimental.shard_map import shard_map
+
+    k = batch.k
+    data_size = int(mesh.shape["data"])
+    if data_size != k:
+        raise ValueError(
+            f"sync training needs one partition per device: mesh data axis "
+            f"is {data_size} but k={k}. On CPU, relaunch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={k}.")
+    pt = gather_partition_tensors(ds, batch)
+    key = jax.random.PRNGKey(seed)
+    params = init_partition_models(key, cfg, ds.num_classes, k)
+    opt = jax.vmap(adamw_init)(params)
+    tensors = {n: jnp.asarray(v) for n, v in _tensors_dict(pt).items()}
+
+    step = make_sync_train_step(cfg, halo, ds.multilabel, mesh, lr)
+    if hlo_out is not None:
+        compiled = step.lower(params, opt, tensors).compile()
+        hlo_out["hlo"] = compiled.as_text()
+        step = compiled
+    for _ in range(epochs):
+        params, opt, loss = step(params, opt, tensors)
+
+    forward = make_sync_forward(cfg, halo)
+
+    def eval_one(p, t):
+        p1 = jax.tree.map(lambda x: x[0], p)
+        t1 = jax.tree.map(lambda x: x[0], t)
+        emb, _ = forward(p1, t1, jax.lax.axis_index("data"))
+        return emb[None]
+
+    pspec = P("data")
+    emb = jax.jit(shard_map(eval_one, mesh=mesh, in_specs=(pspec, pspec),
+                            out_specs=pspec))(params, tensors)
+    return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
+                                   cfg.embed_dim)
 
 
 # ---------------------------------------------------------------------------

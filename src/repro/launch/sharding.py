@@ -168,6 +168,9 @@ def cache_shardings(mesh: Mesh, cache_shape: PyTree, global_batch: int
     heads over model. SSM states: batch over data, else heads over model."""
     baxes = batch_axes(mesh)
     batch_shardable = global_batch % _axis_size(mesh, baxes) == 0
+    # single-axis specs as plain strings (P("data"), not P(("data",))) so
+    # they render canonically; multi-axis stays a tuple
+    baxes = baxes if len(baxes) > 1 else baxes[0]
 
     def one(path, leaf):
         name = _path_str(path)

@@ -1,0 +1,15 @@
+"""End-to-end pipeline: partition (cached) -> train -> assemble -> eval.
+
+See DESIGN.md §1 for the architecture and the artifact-cache format, and
+``python -m repro.pipeline run --help`` for the CLI.
+"""
+from .artifacts import (ARTIFACT_VERSION, ArtifactBundle,
+                        PartitionArtifactStore, compute_bundle)
+from .datasets import DATASETS, get_dataset, graph_fingerprint, \
+    make_karate_dataset
+from .pipeline import Pipeline, PipelineConfig, PipelineReport
+
+__all__ = ["ARTIFACT_VERSION", "ArtifactBundle", "PartitionArtifactStore",
+           "compute_bundle", "DATASETS", "get_dataset", "graph_fingerprint",
+           "make_karate_dataset", "Pipeline", "PipelineConfig",
+           "PipelineReport"]

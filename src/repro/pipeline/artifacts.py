@@ -1,0 +1,254 @@
+"""Partition artifact store — partition once, reuse forever.
+
+GraphStorm-style regression workflows partition a graph once, persist the
+result, and share it across every downstream training run; this module gives
+the repo the same shape (DESIGN.md §1). Two artifact kinds live under one
+cache directory as content-addressed ``.npz`` bundles:
+
+* **labels bundle** — the raw partition assignment, keyed by
+  ``(graph_hash, method, k, seed)``. This is the expensive stage (Leiden +
+  fusion is minutes on paper-scale graphs), so it is cached independently of
+  the assembly scheme: ``inner`` and ``repli`` runs share one partitioning.
+* **batch bundle** — the padded :class:`~repro.core.PartitionBatch` tensors
+  (plus the halo exchange spec when requested), keyed additionally by
+  ``scheme``.
+
+Filenames embed a human-readable prefix plus the first 16 hex chars of the
+key digest; the digest covers a format-version field, so bumping
+``ARTIFACT_VERSION`` silently invalidates stale bundles. Writes are atomic
+(tmp file + ``os.replace``); loads validate the embedded metadata against the
+requested key and treat any mismatch as a miss.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import tempfile
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (Graph, HaloExchangeSpec, PartitionBatch,
+                        build_halo_exchange, build_partition_batch,
+                        get_partitioner)
+
+from .datasets import graph_fingerprint
+
+__all__ = ["ARTIFACT_VERSION", "ArtifactBundle", "PartitionArtifactStore",
+           "compute_bundle"]
+
+log = logging.getLogger("repro.pipeline")
+
+ARTIFACT_VERSION = 1
+
+_BATCH_FIELDS = ("node_ids", "node_mask", "owned_mask", "edge_src",
+                 "edge_dst", "edge_weight", "in_degree")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactBundle:
+    """Everything the training stage needs, plus cache provenance."""
+    labels: np.ndarray
+    batch: PartitionBatch
+    halo: Optional[HaloExchangeSpec]
+    labels_hit: bool
+    batch_hit: bool
+    labels_path: Optional[str]
+    batch_path: Optional[str]
+    partition_seconds: float
+    assemble_seconds: float
+
+
+def _digest(meta: Dict[str, Any]) -> str:
+    import hashlib
+    blob = json.dumps(meta, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def compute_bundle(g: Graph, method: str, k: int, seed: int, scheme: str,
+                   with_halo: bool = False,
+                   labels: Optional[np.ndarray] = None) -> ArtifactBundle:
+    """Storeless path: run partitioner + assembly directly (no caching)."""
+    t0 = time.time()
+    if labels is None:
+        labels = get_partitioner(method)(g, k, seed=seed)
+    t_part = time.time() - t0
+    t0 = time.time()
+    batch = build_partition_batch(g, labels, scheme=scheme)
+    halo = build_halo_exchange(g, labels, batch) if with_halo else None
+    return ArtifactBundle(labels=labels, batch=batch, halo=halo,
+                          labels_hit=False, batch_hit=False,
+                          labels_path=None, batch_path=None,
+                          partition_seconds=t_part,
+                          assemble_seconds=time.time() - t0)
+
+
+class PartitionArtifactStore:
+    """Load-or-compute cache of partition artifacts under ``cache_dir``."""
+
+    def __init__(self, cache_dir: str):
+        self.cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
+        os.makedirs(self.cache_dir, exist_ok=True)
+
+    # ----- key/paths -------------------------------------------------------
+    def _labels_meta(self, graph_hash: str, method: str, k: int, seed: int
+                     ) -> Dict[str, Any]:
+        return {"kind": "labels", "version": ARTIFACT_VERSION,
+                "graph": graph_hash, "method": method, "k": int(k),
+                "seed": int(seed)}
+
+    def _batch_meta(self, graph_hash: str, method: str, k: int, seed: int,
+                    scheme: str) -> Dict[str, Any]:
+        return {"kind": "batch", "version": ARTIFACT_VERSION,
+                "graph": graph_hash, "method": method, "k": int(k),
+                "seed": int(seed), "scheme": scheme}
+
+    def _path(self, meta: Dict[str, Any]) -> str:
+        if meta["kind"] == "labels":
+            stem = f"labels-{meta['method']}-k{meta['k']}-s{meta['seed']}"
+        else:
+            stem = (f"batch-{meta['method']}-k{meta['k']}-s{meta['seed']}"
+                    f"-{meta['scheme']}")
+        return os.path.join(self.cache_dir, f"{stem}-{_digest(meta)}.npz")
+
+    # ----- low-level IO ----------------------------------------------------
+    @staticmethod
+    def _atomic_savez(path: str, **arrays) -> None:
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez_compressed(f, **arrays)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    @staticmethod
+    def _load_npz(path: str, meta: Dict[str, Any]
+                  ) -> Optional[Dict[str, np.ndarray]]:
+        if not os.path.exists(path):
+            return None
+        try:
+            with np.load(path, allow_pickle=False) as z:
+                data = {k: z[k] for k in z.files}
+            stored = json.loads(str(data.pop("meta_json")))
+        except (OSError, ValueError, KeyError) as e:
+            log.warning("unreadable artifact %s (%r) — recomputing", path, e)
+            return None
+        if stored != meta:
+            log.warning("stale artifact %s (key mismatch) — recomputing",
+                        path)
+            return None
+        return data
+
+    # ----- labels ----------------------------------------------------------
+    def load_or_partition(self, g: Graph, method: str, k: int, seed: int,
+                          graph_hash: Optional[str] = None
+                          ) -> Tuple[np.ndarray, bool, str, float]:
+        """Returns (labels, cache_hit, path, partition_seconds)."""
+        graph_hash = graph_hash or graph_fingerprint(g)
+        meta = self._labels_meta(graph_hash, method, k, seed)
+        path = self._path(meta)
+        data = self._load_npz(path, meta)
+        if data is not None:
+            log.info("partition cache HIT: %s (method=%s k=%d seed=%d) — "
+                     "skipping re-partition", path, method, k, seed)
+            return data["labels"].astype(np.int64), True, path, 0.0
+        log.info("partition cache MISS: computing %s k=%d seed=%d",
+                 method, k, seed)
+        t0 = time.time()
+        labels = get_partitioner(method)(g, k, seed=seed)
+        secs = time.time() - t0
+        self._atomic_savez(path, labels=labels.astype(np.int64),
+                           meta_json=np.asarray(json.dumps(meta)))
+        log.info("partition artifact saved: %s (%.2fs)", path, secs)
+        return labels, False, path, secs
+
+    # ----- batch -----------------------------------------------------------
+    def load_or_assemble(self, g: Graph, labels: np.ndarray, method: str,
+                         k: int, seed: int, scheme: str,
+                         with_halo: bool = False,
+                         graph_hash: Optional[str] = None
+                         ) -> Tuple[PartitionBatch, Optional[HaloExchangeSpec],
+                                    bool, str, float]:
+        """Returns (batch, halo, cache_hit, path, assemble_seconds)."""
+        graph_hash = graph_hash or graph_fingerprint(g)
+        meta = self._batch_meta(graph_hash, method, k, seed, scheme)
+        path = self._path(meta)
+        data = self._load_npz(path, meta)
+        if data is not None:
+            batch = PartitionBatch(
+                **{f: data[f] for f in _BATCH_FIELDS},
+                n_pad=int(data["n_pad"]), e_pad=int(data["e_pad"]))
+            halo = None
+            if "halo_send_rows" in data:
+                halo = HaloExchangeSpec(send_rows=data["halo_send_rows"],
+                                        recv_rows=data["halo_recv_rows"],
+                                        h_pad=int(data["halo_h_pad"]))
+            if with_halo and halo is None:
+                # augment the cached bundle in place; the batch itself is
+                # still a hit — only the (cheap) halo plan is recomputed.
+                log.info("batch cache HIT (augmenting with halo spec): %s",
+                         path)
+                halo = build_halo_exchange(g, labels, batch)
+                self._save_batch(path, meta, batch, halo)
+            else:
+                log.info("batch cache HIT: %s", path)
+            return batch, halo, True, path, 0.0
+        log.info("batch cache MISS: assembling scheme=%s", scheme)
+        t0 = time.time()
+        batch = build_partition_batch(g, labels, scheme=scheme)
+        halo = build_halo_exchange(g, labels, batch) if with_halo else None
+        secs = time.time() - t0
+        self._save_batch(path, meta, batch, halo)
+        return batch, halo, False, path, secs
+
+    def _save_batch(self, path: str, meta: Dict[str, Any],
+                    batch: PartitionBatch,
+                    halo: Optional[HaloExchangeSpec]) -> None:
+        arrays = {f: getattr(batch, f) for f in _BATCH_FIELDS}
+        arrays["n_pad"] = np.int64(batch.n_pad)
+        arrays["e_pad"] = np.int64(batch.e_pad)
+        if halo is not None:
+            arrays["halo_send_rows"] = halo.send_rows
+            arrays["halo_recv_rows"] = halo.recv_rows
+            arrays["halo_h_pad"] = np.int64(halo.h_pad)
+        self._atomic_savez(path, meta_json=np.asarray(json.dumps(meta)),
+                           **arrays)
+
+    # ----- the one-call API ------------------------------------------------
+    def load_or_compute(self, g: Graph, method: str, k: int, seed: int,
+                        scheme: str, with_halo: bool = False
+                        ) -> ArtifactBundle:
+        graph_hash = graph_fingerprint(g)
+        labels, lhit, lpath, t_part = self.load_or_partition(
+            g, method, k, seed, graph_hash=graph_hash)
+        batch, halo, bhit, bpath, t_asm = self.load_or_assemble(
+            g, labels, method, k, seed, scheme, with_halo=with_halo,
+            graph_hash=graph_hash)
+        return ArtifactBundle(labels=labels, batch=batch, halo=halo,
+                              labels_hit=lhit, batch_hit=bhit,
+                              labels_path=lpath, batch_path=bpath,
+                              partition_seconds=t_part,
+                              assemble_seconds=t_asm)
+
+    # ----- maintenance -----------------------------------------------------
+    def entries(self):
+        """(filename, size_bytes) for every bundle in the cache."""
+        out = []
+        for name in sorted(os.listdir(self.cache_dir)):
+            if name.endswith(".npz"):
+                p = os.path.join(self.cache_dir, name)
+                out.append((name, os.path.getsize(p)))
+        return out
+
+    def clear(self) -> int:
+        n = 0
+        for name, _ in self.entries():
+            os.unlink(os.path.join(self.cache_dir, name))
+            n += 1
+        return n

@@ -1,0 +1,125 @@
+"""CLI for the end-to-end pipeline.
+
+    PYTHONPATH=src python -m repro.pipeline run \
+        --dataset karate --method leiden_fusion --k 4 --mode local
+
+    PYTHONPATH=src python -m repro.pipeline cache --list
+    PYTHONPATH=src python -m repro.pipeline cache --clear
+
+Partition artifacts land under ``--cache-dir`` (default
+``~/.cache/repro/partitions``); a second run with the same dataset/method/
+k/seed logs a cache hit and skips re-partitioning.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import os
+import sys
+from typing import List, Optional
+
+DEFAULT_CACHE = os.path.join("~", ".cache", "repro", "partitions")
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.pipeline",
+        description="Leiden-Fusion end-to-end pipeline: partition -> "
+                    "communication-free GNN training -> embedding assembly "
+                    "-> node classification.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    run = sub.add_parser("run", help="run the full pipeline once")
+    run.add_argument("--dataset", default="arxiv-like",
+                     help="karate | arxiv-like | proteins-like")
+    run.add_argument("--nodes", type=int, default=None,
+                     help="node count override for synthetic datasets")
+    run.add_argument("--method", default="leiden_fusion",
+                     help="partitioner: leiden_fusion | metis | lpa | "
+                          "random | metis_f | lpa_f | single")
+    run.add_argument("--k", type=int, default=8)
+    run.add_argument("--seed", type=int, default=0)
+    run.add_argument("--scheme", default="repli", choices=["inner", "repli"])
+    run.add_argument("--mode", default="local", choices=["local", "sync"])
+    run.add_argument("--model", default="gcn", choices=["gcn", "sage"])
+    run.add_argument("--hidden-dim", type=int, default=128)
+    run.add_argument("--embed-dim", type=int, default=128)
+    run.add_argument("--num-layers", type=int, default=3)
+    run.add_argument("--dropout", type=float, default=0.3)
+    run.add_argument("--epochs", type=int, default=60)
+    run.add_argument("--lr", type=float, default=5e-3)
+    run.add_argument("--classifier-epochs", type=int, default=150)
+    run.add_argument("--cache-dir", default=DEFAULT_CACHE)
+    run.add_argument("--no-cache", action="store_true",
+                     help="disable the partition artifact cache")
+    run.add_argument("--checkpoint-dir", default=None,
+                     help="save trained per-partition params here")
+    run.add_argument("--no-hlo", action="store_true",
+                     help="skip lowering the train step for the "
+                          "collective-bytes report (saves one compile)")
+    run.add_argument("--json", action="store_true",
+                     help="print the report as JSON instead of the summary")
+
+    cache = sub.add_parser("cache", help="inspect/clear the artifact cache")
+    cache.add_argument("--cache-dir", default=DEFAULT_CACHE)
+    cache.add_argument("--list", action="store_true", default=True)
+    cache.add_argument("--clear", action="store_true")
+    return ap
+
+
+def _cmd_run(args: argparse.Namespace) -> int:
+    from .pipeline import Pipeline, PipelineConfig
+    dataset_kwargs = {}
+    if args.nodes is not None:
+        dataset_kwargs["n"] = args.nodes
+    cfg = PipelineConfig(
+        dataset=args.dataset, method=args.method, k=args.k, seed=args.seed,
+        scheme=args.scheme, mode=args.mode, model=args.model,
+        hidden_dim=args.hidden_dim, embed_dim=args.embed_dim,
+        num_layers=args.num_layers, dropout=args.dropout,
+        epochs=args.epochs, lr=args.lr,
+        classifier_epochs=args.classifier_epochs,
+        cache_dir=None if args.no_cache else args.cache_dir,
+        checkpoint_dir=args.checkpoint_dir,
+        collect_hlo=not args.no_hlo,
+        dataset_kwargs=dataset_kwargs)
+    report = Pipeline(cfg).run()
+    if args.json:
+        import json
+        print(json.dumps(report.as_dict(), indent=2))
+    else:
+        print(report.summary())
+    return 0
+
+
+def _cmd_cache(args: argparse.Namespace) -> int:
+    from .artifacts import PartitionArtifactStore
+    store = PartitionArtifactStore(args.cache_dir)
+    if args.clear:
+        n = store.clear()
+        print(f"removed {n} artifact(s) from {store.cache_dir}")
+        return 0
+    entries = store.entries()
+    if not entries:
+        print(f"cache empty: {store.cache_dir}")
+        return 0
+    total = 0
+    for name, size in entries:
+        total += size
+        print(f"{size:>12d}  {name}")
+    print(f"{total:>12d}  total ({len(entries)} artifacts) "
+          f"in {store.cache_dir}")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    logging.basicConfig(level=logging.INFO,
+                        format="%(levelname)s %(name)s: %(message)s")
+    args = _build_parser().parse_args(argv)
+    if args.cmd == "run":
+        return _cmd_run(args)
+    return _cmd_cache(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

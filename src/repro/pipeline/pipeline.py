@@ -1,0 +1,256 @@
+"""The end-to-end pipeline orchestrator (DESIGN.md §1).
+
+Chains the paper's three stages behind one call:
+
+    dataset -> partition (cached) -> per-partition GNN training -> embedding
+    assembly -> MLP classifier eval
+
+and returns a single :class:`PipelineReport` carrying partition quality,
+collective bytes of the lowered train step, classification accuracy, and
+per-stage timings. Training mode is ``local`` (the paper's communication-free
+scheme) or ``sync`` (the DGL-style halo-exchange baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Dict, Mapping, Optional
+
+from repro.core import NodeDataset, evaluate_partition
+from repro.gnn import GNNConfig, train_classifier, train_local, train_sync
+
+from .artifacts import ArtifactBundle, PartitionArtifactStore, compute_bundle
+from .datasets import get_dataset
+
+__all__ = ["PipelineConfig", "PipelineReport", "Pipeline"]
+
+log = logging.getLogger("repro.pipeline")
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """One run of the end-to-end pipeline. Mirrors the CLI flags 1:1."""
+    dataset: str = "arxiv-like"
+    method: str = "leiden_fusion"   # any key of repro.core.PARTITIONERS
+    k: int = 8
+    seed: int = 0
+    scheme: str = "repli"           # "inner" | "repli" (sync forces repli)
+    mode: str = "local"             # "local" | "sync"
+    model: str = "gcn"              # "gcn" | "sage"
+    hidden_dim: int = 128
+    embed_dim: int = 128
+    num_layers: int = 3
+    dropout: float = 0.3
+    epochs: int = 60
+    lr: float = 5e-3
+    classifier_epochs: int = 150    # <= 0 skips the classifier stage
+    classifier_hidden: int = 256
+    cache_dir: Optional[str] = None     # None disables the artifact cache
+    checkpoint_dir: Optional[str] = None
+    collect_hlo: bool = True        # lower+compile once to count collectives
+    shard_data_axis: bool = True    # local mode: shard k over the mesh
+                                    # `data` axis; False forces unsharded
+                                    # (sequential) execution, e.g. for
+                                    # per-partition wall-time measurement
+    dataset_kwargs: Mapping[str, Any] = dataclasses.field(
+        default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    """Structured result of one pipeline run."""
+    config: Dict[str, Any]
+    dataset: str
+    num_nodes: int
+    num_edges: int
+    num_devices: int
+    partition: Dict[str, Any]        # PartitionReport.as_dict()
+    partition_cache_hit: bool
+    batch_cache_hit: bool
+    artifact_paths: Dict[str, Optional[str]]
+    shapes: Dict[str, int]           # k, n_pad, e_pad
+    collectives: Dict[str, int]      # collective_bytes() of the train step
+    accuracy: Dict[str, float]       # train/val/test (empty if skipped)
+    timings: Dict[str, float]
+    checkpoint_path: Optional[str] = None
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        c = self.config
+        lines = ["PipelineReport"]
+        lines.append(f"  dataset      {self.dataset} (n={self.num_nodes}, "
+                     f"edges={self.num_edges})")
+        hit = "HIT" if self.partition_cache_hit else "miss"
+        lines.append(f"  partition    {c['method']} k={c['k']} "
+                     f"seed={c['seed']} [cache {hit}]")
+        p = self.partition
+        lines.append(f"               cut={p['edge_cut_pct']:.1f}% "
+                     f"components={p['total_components']} "
+                     f"isolated={p['total_isolated']} "
+                     f"balance={p['node_balance']:.2f} "
+                     f"replication={p['replication_factor']:.2f}")
+        bhit = "HIT" if self.batch_cache_hit else "miss"
+        lines.append(f"  assembly     scheme={c['scheme']} "
+                     f"n_pad={self.shapes['n_pad']} "
+                     f"e_pad={self.shapes['e_pad']} [cache {bhit}]")
+        lines.append(f"  training     mode={c['mode']} model={c['model']} "
+                     f"layers={c['num_layers']} epochs={c['epochs']} "
+                     f"devices={self.num_devices}")
+        if self.collectives:
+            lines.append(f"  collectives  {self.collectives['total']} "
+                         f"bytes/step (all-gather="
+                         f"{self.collectives['all-gather']}, all-reduce="
+                         f"{self.collectives['all-reduce']})")
+        if self.accuracy:
+            lines.append(f"  accuracy     train={self.accuracy['train']:.3f} "
+                         f"val={self.accuracy['val']:.3f} "
+                         f"test={self.accuracy['test']:.3f}")
+        if self.checkpoint_path:
+            lines.append(f"  checkpoint   {self.checkpoint_path}")
+        t = self.timings
+        lines.append("  timings      " + " ".join(
+            f"{k}={v:.2f}s" for k, v in t.items()))
+        return "\n".join(lines)
+
+
+class Pipeline:
+    """Orchestrates partition -> train -> assemble -> eval.
+
+    ``store``/``mesh`` may be injected (the benchmarks share one store across
+    every grid point); otherwise they are derived from the config /
+    ``repro.launch.mesh``.
+    """
+
+    def __init__(self, config: PipelineConfig,
+                 store: Optional[PartitionArtifactStore] = None,
+                 mesh=None):
+        self.config = config
+        if store is None and config.cache_dir:
+            store = PartitionArtifactStore(config.cache_dir)
+        self.store = store
+        self.mesh = mesh
+
+    # ------------------------------------------------------------------
+    def _resolve_mesh(self, k: int):
+        """Mesh for the train step, from repro.launch when not injected."""
+        import jax
+        from repro.launch.mesh import make_local_mesh
+        mesh = self.mesh
+        if self.config.mode == "local" and not self.config.shard_data_axis:
+            return None
+        if mesh is None:
+            mesh = make_local_mesh()
+        data = int(mesh.shape["data"])
+        if self.config.mode == "sync":
+            return mesh          # train_sync validates data == k itself
+        if k % data != 0:
+            log.warning("k=%d not divisible by mesh data axis %d — "
+                        "running unsharded", k, data)
+            return None
+        return mesh
+
+    # ------------------------------------------------------------------
+    def run(self, ds: Optional[NodeDataset] = None) -> PipelineReport:
+        import jax
+        cfg = self.config
+        if cfg.mode not in ("local", "sync"):
+            raise ValueError(f"mode must be local|sync, got {cfg.mode!r}")
+        if cfg.k < 1:
+            raise ValueError(f"k must be >= 1, got {cfg.k}")
+        scheme = cfg.scheme
+        if cfg.mode == "sync" and scheme != "repli":
+            log.info("sync mode requires halo replicas — forcing "
+                     "scheme=repli (was %s)", scheme)
+            scheme = "repli"
+        timings: Dict[str, float] = {}
+        t_all = time.time()
+
+        # -- stage 1: dataset ------------------------------------------
+        t0 = time.time()
+        if ds is None:
+            ds = get_dataset(cfg.dataset, **dict(cfg.dataset_kwargs))
+        timings["dataset"] = time.time() - t0
+
+        # -- stage 2: partition + assembly (load-or-compute) -----------
+        t0 = time.time()
+        need_halo = cfg.mode == "sync"
+        if self.store is not None:
+            bundle = self.store.load_or_compute(
+                ds.graph, cfg.method, cfg.k, cfg.seed, scheme,
+                with_halo=need_halo)
+        else:
+            bundle = compute_bundle(ds.graph, cfg.method, cfg.k, cfg.seed,
+                                    scheme, with_halo=need_halo)
+        timings["partition"] = bundle.partition_seconds
+        timings["assemble"] = bundle.assemble_seconds
+        part_report = evaluate_partition(ds.graph, bundle.labels).as_dict()
+        timings["partition_stage"] = time.time() - t0
+
+        # -- stage 3: per-partition GNN training -----------------------
+        t0 = time.time()
+        gnn_cfg = GNNConfig(kind=cfg.model,
+                            feature_dim=int(ds.features.shape[1]),
+                            hidden_dim=cfg.hidden_dim,
+                            embed_dim=cfg.embed_dim,
+                            num_layers=cfg.num_layers, dropout=cfg.dropout)
+        mesh = self._resolve_mesh(bundle.batch.k)
+        hlo_out: Optional[Dict[str, str]] = {} if cfg.collect_hlo else None
+        if cfg.mode == "local":
+            params, embeddings = train_local(
+                ds, bundle.batch, gnn_cfg, epochs=cfg.epochs, lr=cfg.lr,
+                seed=cfg.seed, mesh=mesh, hlo_out=hlo_out)
+        else:
+            params, embeddings = train_sync(
+                ds, bundle.batch, bundle.halo, gnn_cfg, mesh,
+                epochs=cfg.epochs, lr=cfg.lr, seed=cfg.seed,
+                hlo_out=hlo_out)
+        timings["train"] = time.time() - t0
+
+        collectives: Dict[str, int] = {}
+        if hlo_out:
+            from repro.launch.hlo_analysis import collective_bytes
+            collectives = collective_bytes(hlo_out["hlo"])
+            log.info("train-step collectives: %d bytes/step (mode=%s)",
+                     collectives["total"], cfg.mode)
+
+        # -- stage 4: classifier on assembled embeddings ---------------
+        accuracy: Dict[str, float] = {}
+        if cfg.classifier_epochs > 0:
+            t0 = time.time()
+            accuracy = train_classifier(
+                ds, embeddings, hidden=cfg.classifier_hidden,
+                epochs=cfg.classifier_epochs, seed=cfg.seed)
+            timings["classifier"] = time.time() - t0
+
+        # -- stage 5: optional checkpoint ------------------------------
+        checkpoint_path = None
+        if cfg.checkpoint_dir:
+            from repro.checkpoint import save_checkpoint
+            checkpoint_path = save_checkpoint(cfg.checkpoint_dir,
+                                              cfg.epochs, params)
+            log.info("saved model checkpoint: %s", checkpoint_path)
+
+        timings["total"] = time.time() - t_all
+        src_once = ds.graph.num_arcs // 2
+        return PipelineReport(
+            config={**dataclasses.asdict(cfg), "scheme": scheme,
+                    "dataset_kwargs": dict(cfg.dataset_kwargs)},
+            dataset=ds.name,
+            num_nodes=int(ds.graph.n),
+            num_edges=int(src_once),
+            num_devices=len(jax.devices()),
+            partition=part_report,
+            partition_cache_hit=bundle.labels_hit,
+            batch_cache_hit=bundle.batch_hit,
+            artifact_paths={"labels": bundle.labels_path,
+                            "batch": bundle.batch_path},
+            shapes={"k": bundle.batch.k, "n_pad": bundle.batch.n_pad,
+                    "e_pad": bundle.batch.e_pad},
+            collectives=collectives,
+            accuracy={k: float(v) for k, v in accuracy.items()},
+            timings={k: round(v, 4) for k, v in timings.items()},
+            checkpoint_path=checkpoint_path,
+        )

@@ -1,0 +1,254 @@
+"""Pipeline subsystem tests: artifact store round-trip, load-or-compute
+cache semantics, Pipeline orchestration, and a CLI smoke test on the karate
+club graph."""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import build_partition_batch, build_halo_exchange, \
+    leiden_fusion
+from repro.pipeline import (Pipeline, PipelineConfig,
+                            PartitionArtifactStore, get_dataset,
+                            graph_fingerprint, make_karate_dataset)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture()
+def karate():
+    return make_karate_dataset()
+
+
+@pytest.fixture()
+def store(tmp_path):
+    return PartitionArtifactStore(str(tmp_path / "cache"))
+
+
+# ---------------------------------------------------------------------------
+# datasets
+# ---------------------------------------------------------------------------
+def test_dataset_registry_normalizes_names():
+    ds = get_dataset("arxiv-like", n=200, feature_dim=8, num_classes=4)
+    assert ds.name == "arxiv_like" and ds.graph.n == 200
+    with pytest.raises(KeyError, match="unknown dataset"):
+        get_dataset("nope")
+
+
+def test_karate_dataset_shapes(karate):
+    assert karate.graph.n == 34
+    assert karate.num_classes == 2
+    assert karate.features.shape == (34, 34)
+    assert set(np.unique(karate.labels)) == {0, 1}
+    # masks partition the node set
+    total = (karate.train_mask.astype(int) + karate.val_mask.astype(int)
+             + karate.test_mask.astype(int))
+    assert (total == 1).all()
+
+
+def test_graph_fingerprint_is_content_addressed(karate):
+    h1 = graph_fingerprint(karate.graph)
+    h2 = graph_fingerprint(make_karate_dataset(seed=7).graph)
+    assert h1 == h2          # same topology, different masks -> same hash
+    other = get_dataset("arxiv-like", n=100, feature_dim=4, num_classes=2)
+    assert graph_fingerprint(other.graph) != h1
+
+
+# ---------------------------------------------------------------------------
+# artifact store
+# ---------------------------------------------------------------------------
+def _assert_batches_equal(a, b):
+    assert a.n_pad == b.n_pad and a.e_pad == b.e_pad and a.k == b.k
+    for f in ("node_ids", "node_mask", "owned_mask", "edge_src", "edge_dst",
+              "edge_weight", "in_degree"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+
+
+def test_roundtrip_partition_save_load(karate, store):
+    """partition -> save -> load gives back an identical PartitionBatch."""
+    g = karate.graph
+    first = store.load_or_compute(g, "leiden_fusion", 4, 0, "repli",
+                                  with_halo=True)
+    assert not first.labels_hit and not first.batch_hit
+    assert os.path.exists(first.labels_path)
+    assert os.path.exists(first.batch_path)
+
+    second = store.load_or_compute(g, "leiden_fusion", 4, 0, "repli",
+                                   with_halo=True)
+    assert second.labels_hit and second.batch_hit
+    np.testing.assert_array_equal(first.labels, second.labels)
+    _assert_batches_equal(first.batch, second.batch)
+    np.testing.assert_array_equal(first.halo.send_rows,
+                                  second.halo.send_rows)
+    np.testing.assert_array_equal(first.halo.recv_rows,
+                                  second.halo.recv_rows)
+    assert first.halo.h_pad == second.halo.h_pad
+
+    # loaded bundle matches a from-scratch rebuild exactly
+    fresh_labels = leiden_fusion(g, 4, seed=0)
+    np.testing.assert_array_equal(second.labels, fresh_labels)
+    fresh = build_partition_batch(g, fresh_labels, scheme="repli")
+    _assert_batches_equal(second.batch, fresh)
+    fresh_halo = build_halo_exchange(g, fresh_labels, fresh)
+    np.testing.assert_array_equal(second.halo.send_rows,
+                                  fresh_halo.send_rows)
+
+
+def test_cache_hit_skips_repartitioning(karate, store, monkeypatch):
+    """Second load must NOT invoke the partitioner again."""
+    g = karate.graph
+    store.load_or_compute(g, "leiden_fusion", 2, 0, "inner")
+
+    def boom(*a, **k):
+        raise AssertionError("partitioner re-invoked despite cache hit")
+    import repro.pipeline.artifacts as artifacts_mod
+    monkeypatch.setattr(artifacts_mod, "get_partitioner",
+                        lambda name: boom)
+    bundle = store.load_or_compute(g, "leiden_fusion", 2, 0, "inner")
+    assert bundle.labels_hit and bundle.batch_hit
+
+
+def test_labels_shared_across_schemes(karate, store):
+    """inner and repli runs share ONE labels artifact (partition once)."""
+    g = karate.graph
+    a = store.load_or_compute(g, "metis", 2, 0, "inner")
+    b = store.load_or_compute(g, "metis", 2, 0, "repli")
+    assert not a.labels_hit
+    assert b.labels_hit                   # second scheme reuses the labels
+    assert not b.batch_hit                # but assembles its own batch
+    assert a.labels_path == b.labels_path
+    assert a.batch_path != b.batch_path
+
+
+def test_key_separates_method_k_seed(karate, store):
+    g = karate.graph
+    base = store.load_or_compute(g, "random", 2, 0, "inner")
+    for method, k, seed in (("lpa", 2, 0), ("random", 4, 0),
+                            ("random", 2, 1)):
+        other = store.load_or_compute(g, method, k, seed, "inner")
+        assert not other.labels_hit
+        assert other.labels_path != base.labels_path
+
+
+def test_halo_augments_cached_batch(karate, store):
+    """A batch cached without halo gets upgraded in place when halo is
+    requested — the batch itself is still a hit."""
+    g = karate.graph
+    a = store.load_or_compute(g, "leiden_fusion", 2, 0, "repli",
+                              with_halo=False)
+    assert a.halo is None
+    b = store.load_or_compute(g, "leiden_fusion", 2, 0, "repli",
+                              with_halo=True)
+    assert b.batch_hit and b.halo is not None
+    c = store.load_or_compute(g, "leiden_fusion", 2, 0, "repli",
+                              with_halo=True)
+    assert c.batch_hit and c.halo is not None
+    np.testing.assert_array_equal(b.halo.send_rows, c.halo.send_rows)
+
+
+def test_corrupt_artifact_is_a_miss(karate, store):
+    g = karate.graph
+    a = store.load_or_compute(g, "random", 2, 0, "inner")
+    with open(a.labels_path, "wb") as f:
+        f.write(b"not an npz")
+    b = store.load_or_compute(g, "random", 2, 0, "inner")
+    assert not b.labels_hit               # recomputed, not crashed
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+# ---------------------------------------------------------------------------
+# orchestrator
+# ---------------------------------------------------------------------------
+def test_pipeline_end_to_end_with_cache(tmp_path, karate):
+    cfg = PipelineConfig(dataset="karate", method="leiden_fusion", k=4,
+                         mode="local", epochs=3, classifier_epochs=10,
+                         hidden_dim=16, embed_dim=16, num_layers=2,
+                         dropout=0.0, cache_dir=str(tmp_path / "c"),
+                         collect_hlo=True)
+    rep1 = Pipeline(cfg).run(karate)
+    assert not rep1.partition_cache_hit
+    assert set(rep1.accuracy) == {"train", "val", "test"}
+    assert rep1.partition["total_isolated"] == 0
+    assert rep1.collectives["total"] == 0      # the paper's claim
+    assert rep1.shapes["k"] == 4
+    assert rep1.timings["total"] > 0
+
+    rep2 = Pipeline(cfg).run(karate)
+    assert rep2.partition_cache_hit and rep2.batch_cache_hit
+    # deterministic end-to-end given identical config + cached partition
+    assert rep1.accuracy == rep2.accuracy
+    # report serializes
+    json.dumps(rep2.as_dict())
+    assert "cache HIT" in rep2.summary()
+
+
+def test_pipeline_centralized_reference(tmp_path, karate):
+    cfg = PipelineConfig(dataset="karate", method="single", k=1,
+                         scheme="inner", epochs=2, classifier_epochs=5,
+                         hidden_dim=8, embed_dim=8, num_layers=2,
+                         dropout=0.0, cache_dir=None, collect_hlo=False)
+    rep = Pipeline(cfg).run(karate)
+    assert rep.shapes["k"] == 1
+    assert rep.collectives == {}
+
+
+def test_pipeline_rejects_bad_mode(karate):
+    cfg = PipelineConfig(dataset="karate", mode="nope")
+    with pytest.raises(ValueError, match="mode"):
+        Pipeline(cfg).run(karate)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke test (subprocess, as users invoke it)
+# ---------------------------------------------------------------------------
+def _run_cli(args, tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.pipeline"] + args,
+        capture_output=True, text=True, env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout + out.stderr
+
+
+def test_cli_sync_mode_reports_collectives(tmp_path):
+    """Sync mode (one partition per fake device) must report nonzero
+    collective bytes — the traffic LF eliminates."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.pipeline", "run", "--dataset",
+         "karate", "--method", "leiden_fusion", "--k", "4", "--mode",
+         "sync", "--epochs", "3", "--classifier-epochs", "5",
+         "--hidden-dim", "8", "--embed-dim", "8",
+         "--cache-dir", str(tmp_path / "cache")],
+        capture_output=True, text=True, env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-4000:]
+    text = out.stdout + out.stderr
+    m = re.search(r"collectives\s+(\d+) bytes/step", text)
+    assert m, text
+    assert int(m.group(1)) > 0
+
+
+def test_cli_smoke_karate(tmp_path):
+    args = ["run", "--dataset", "karate", "--method", "leiden_fusion",
+            "--k", "4", "--mode", "local", "--epochs", "3",
+            "--classifier-epochs", "10", "--hidden-dim", "16",
+            "--embed-dim", "16", "--no-hlo",
+            "--cache-dir", str(tmp_path / "cache")]
+    out1 = _run_cli(args, tmp_path)
+    assert "PipelineReport" in out1
+    assert "accuracy" in out1
+    assert "cache MISS" in out1
+    out2 = _run_cli(args, tmp_path)
+    assert "partition cache HIT" in out2
+    assert "skipping re-partition" in out2
+
+    listing = _run_cli(["cache", "--cache-dir", str(tmp_path / "cache")],
+                       tmp_path)
+    assert "labels-leiden_fusion-k4" in listing

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Docs lint: fail if README/DESIGN cross-references point at missing files.
+
+Checks two reference styles in the repo's top-level markdown docs:
+
+1. Relative markdown links: ``[text](path)`` (external ``http(s)://`` and
+   anchors are skipped).
+2. Inline-code path references: `` `src/...` ``-style tokens that start with
+   a known top-level directory or file and look like a concrete path.
+
+Exit code 1 lists every dangling reference.
+
+    python tools/docs_lint.py [README.md DESIGN.md ...]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DEFAULT_DOCS = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md"]
+
+# Path-ish inline-code tokens must start with one of these to be checked
+# (keeps CLI examples like `--cache-dir ~/.cache/...` out of scope).
+_PATH_ROOTS = ("src/", "tests/", "benchmarks/", "examples/", "tools/",
+               ".github/")
+_TOP_FILES = ("README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md",
+              "PAPERS.md", "SNIPPETS.md", "CHANGES.md", "requirements.txt",
+              "requirements-dev.txt")
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s#]+)(?:#[^)]*)?\)")
+_CODE_SPAN = re.compile(r"`([^`\n]+)`")
+
+
+def _candidate_paths(text: str) -> List[Tuple[str, str]]:
+    """(kind, path) references worth checking."""
+    out = []
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        out.append(("link", target))
+    for m in _CODE_SPAN.finditer(text):
+        token = m.group(1).strip()
+        # strip pytest node ids and trailing :line refs
+        token = token.split("::")[0]
+        token = re.sub(r":\d+$", "", token).rstrip("/")
+        if token.startswith("benchmarks/artifacts"):
+            continue            # generated at benchmark runtime
+
+        if token in _TOP_FILES:
+            out.append(("code", token))
+        elif token.startswith(_PATH_ROOTS) and " " not in token:
+            # only concrete paths, not glob-ish prose
+            if "*" not in token and "<" not in token:
+                out.append(("code", token))
+    return out
+
+
+def lint(docs: List[str]) -> List[str]:
+    errors = []
+    for doc in docs:
+        doc_path = os.path.join(REPO, doc)
+        if not os.path.exists(doc_path):
+            continue
+        with open(doc_path, encoding="utf-8") as f:
+            text = f.read()
+        for kind, ref in _candidate_paths(text):
+            target = os.path.normpath(os.path.join(REPO, ref))
+            if not os.path.exists(target):
+                errors.append(f"{doc}: dangling {kind} reference -> {ref}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    docs = argv or DEFAULT_DOCS
+    errors = lint(docs)
+    if errors:
+        print("docs lint FAILED:")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"docs lint OK ({', '.join(d for d in docs if os.path.exists(os.path.join(REPO, d)))})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
