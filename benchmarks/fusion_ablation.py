@@ -8,8 +8,8 @@ from .common import arxiv_like, emit
 
 
 def run(fast: bool = True):
-    from repro.core import (PARTITIONERS, build_partition_batch,
-                            evaluate_partition, split_into_components, fuse)
+    from repro.core import (build_partition_batch, evaluate_partition,
+                            partition_from_spec, split_into_components, fuse)
     from repro.gnn import GNNConfig, train_classifier, train_local
     ds = arxiv_like()
     k = 16
@@ -17,13 +17,14 @@ def run(fast: bool = True):
     acc_rows = []
     epochs = 40 if fast else 80
     for base in ("metis", "lpa", "leiden_fusion"):
-        t0 = time.time()
         if base == "leiden_fusion":
-            labels_f = PARTITIONERS[base](ds.graph, k, seed=0)
+            res = partition_from_spec(ds.graph, base, k, seed=0)
+            labels_f = res.labels
             cut_before = None
-            fusion_time = time.time() - t0
+            fusion_time = res.seconds
         else:
-            labels0 = PARTITIONERS[base](ds.graph, k, seed=0)
+            # base alone for the "before" cut, then its "+f" spec variant
+            labels0 = partition_from_spec(ds.graph, base, k, seed=0).labels
             cut_before = evaluate_partition(ds.graph, labels0).edge_cut_pct
             t1 = time.time()
             comms = split_into_components(ds.graph, labels0)

@@ -6,11 +6,12 @@ from .common import emit
 
 
 def run(fast: bool = True):
-    from repro.core import (PARTITIONERS, evaluate_partition, karate_club)
+    from repro.core import evaluate_partition, karate_club, \
+        partition_from_spec
     g = karate_club()
     rows = []
     for name in ("lpa", "metis", "random", "leiden_fusion"):
-        labels = PARTITIONERS[name](g, 2, seed=0)
+        labels = partition_from_spec(g, name, 2, seed=0).labels
         rep = evaluate_partition(g, labels)
         rows.append({
             "method": name,

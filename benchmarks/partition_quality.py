@@ -3,22 +3,22 @@ each partitioning method — edge-cut %, components, isolated nodes, node/edge
 balance, replication factor."""
 from __future__ import annotations
 
-from .common import arxiv_like, emit, proteins_like, timer
+from .common import arxiv_like, emit, proteins_like
 
 
 def run(fast: bool = True, dataset: str = "arxiv_like"):
-    from repro.core import PARTITIONERS, evaluate_partition
+    from repro.core import evaluate_partition, partition_from_spec
     ds = arxiv_like() if dataset == "arxiv_like" else proteins_like()
     ks = (2, 8, 16) if fast else (2, 4, 8, 16)
+    # spec strings: the +f combinator variants ride along for free
     methods = ("lpa", "metis", "random", "leiden_fusion")
     rows = []
     for k in ks:
         for m in methods:
-            with timer() as t:
-                labels = PARTITIONERS[m](ds.graph, k, seed=0)
-            rep = evaluate_partition(ds.graph, labels)
-            rows.append({"dataset": ds.name, "k": k, "method": m,
-                         **rep.as_dict(), "partition_time_s": t.s})
+            res = partition_from_spec(ds.graph, m, k, seed=0)
+            rep = evaluate_partition(ds.graph, res.labels)
+            rows.append({"dataset": ds.name, "k": k, "method": res.spec,
+                         **rep.as_dict(), "partition_time_s": res.seconds})
     emit(f"fig4_quality_{dataset}", rows)
     return rows
 

@@ -9,7 +9,7 @@ from .common import arxiv_like, emit
 
 
 def run(fast: bool = True):
-    from repro.core import PARTITIONERS, leiden
+    from repro.core import leiden, partition_from_spec
     ds = arxiv_like()
     ks = (2, 4, 8, 16)
     rows = []
@@ -19,10 +19,9 @@ def run(fast: bool = True):
     leiden_s = time.time() - t0
     for method in ("lpa", "metis", "leiden_fusion"):
         for k in ks:
-            t0 = time.time()
-            PARTITIONERS[method](ds.graph, k, seed=0)
-            rows.append({"method": method, "k": k,
-                         "time_s": round(time.time() - t0, 2)})
+            res = partition_from_spec(ds.graph, method, k, seed=0)
+            rows.append({"method": res.spec, "k": k,
+                         "time_s": round(res.seconds, 2)})
     # the paper's Table 3 numbers are fusion-only (Leiden communities are
     # precomputed and cached, §5.3) — measure that separately:
     from repro.core import fuse, leiden

@@ -41,12 +41,15 @@ def main():
     ref = run("single", 1, "inner")
     print(f"centralized: test={ref.accuracy['test']:.3f}")
 
-    for method in ("leiden_fusion", "metis", "lpa", "random"):
+    # methods are partitioner spec strings — "lpa+f(alpha=0.1)" is the
+    # paper's +F operator over LPA, cached under its own config fingerprint
+    for method in ("leiden_fusion", "metis", "lpa", "lpa+f(alpha=0.1)",
+                   "random"):
         for scheme in ("inner", "repli"):
             rep = run(method, args.k, scheme)
             p = rep.partition
             cached = "cached" if rep.partition_cache_hit else "fresh "
-            print(f"{method:14s} k={args.k} {scheme:5s}: "
+            print(f"{method:18s} k={args.k} {scheme:5s}: "
                   f"test={rep.accuracy['test']:.3f} "
                   f"(cut={p['edge_cut_pct']:.1f}% "
                   f"comps={p['total_components']} "

@@ -9,8 +9,8 @@ path as `python -m repro.pipeline run`.
 """
 import tempfile
 
-from repro.core import evaluate_partition, karate_club, leiden_fusion, \
-    metis_partition, make_arxiv_like
+from repro.core import PartitionerSpec, evaluate_partition, karate_club, \
+    leiden_fusion, make_arxiv_like, partition_from_spec
 from repro.pipeline import Pipeline, PipelineConfig
 
 
@@ -21,14 +21,18 @@ def main():
     print("karate k=2:", rep.as_dict())
     assert rep.max_components == 1 and rep.total_isolated == 0
 
-    # --- 2. a real(ish) graph: LF vs METIS quality -------------------------
+    # --- 2. a real(ish) graph, via partitioner spec strings ----------------
+    # any registered method, configured inline; "+f" composes fusion over
+    # any base (run `python -m repro.pipeline partitioners` for the list)
     ds = make_arxiv_like(n=3000, feature_dim=64, seed=0)
-    for name, fn in (("leiden_fusion", leiden_fusion),
-                     ("metis", metis_partition)):
-        rep = evaluate_partition(ds.graph, fn(ds.graph, 8))
-        print(f"{name:14s} k=8: cut={rep.edge_cut_pct:5.1f}% "
+    for spec in ("leiden_fusion", "metis", "metis+f(alpha=0.1)"):
+        caps = PartitionerSpec.parse(spec).capabilities
+        res = partition_from_spec(ds.graph, spec, 8, seed=0)
+        rep = evaluate_partition(ds.graph, res.labels)
+        print(f"{res.spec:20s} k=8: cut={rep.edge_cut_pct:5.1f}% "
               f"components={rep.total_components:3d} "
-              f"isolated={rep.total_isolated}")
+              f"isolated={rep.total_isolated} "
+              f"[{caps.describe()}] fp={res.fingerprint}")
 
     # --- 3. the full pipeline, with the partition artifact cached ----------
     with tempfile.TemporaryDirectory() as cache:

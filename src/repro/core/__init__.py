@@ -2,10 +2,18 @@
 from .graph import Graph, NodeDataset, karate_club, make_arxiv_like, make_proteins_like
 from .leiden import leiden
 from .fusion import fuse, leiden_fusion, community_cuts
+from .registry import (Capabilities, FusionConfig, NullConfig, Partitioner,
+                       RegisteredPartitioner, register_partitioner,
+                       unregister_partitioner, registered_partitioners,
+                       get_entry)
 from .partitioners import (PARTITIONERS, get_partitioner, lpa_partition,
                            metis_partition, random_partition,
                            single_partition, with_fusion,
-                           split_into_components)
+                           split_into_components,
+                           SingleConfig, RandomConfig, LpaConfig,
+                           MetisConfig, LeidenFusionConfig)
+from .spec import (PartitionResult, PartitionerSpec, partition_from_spec,
+                   parse_spec_text)
 from .metrics import PartitionReport, evaluate_partition
 from .assemble import (PartitionBatch, HaloExchangeSpec,
                        build_partition_batch, build_halo_exchange)
@@ -13,6 +21,15 @@ from .assemble import (PartitionBatch, HaloExchangeSpec,
 __all__ = [
     "Graph", "NodeDataset", "karate_club", "make_arxiv_like",
     "make_proteins_like", "leiden", "fuse", "leiden_fusion", "community_cuts",
+    # partitioner API v2
+    "Capabilities", "FusionConfig", "NullConfig", "Partitioner",
+    "RegisteredPartitioner", "register_partitioner",
+    "unregister_partitioner", "registered_partitioners", "get_entry",
+    "PartitionResult", "PartitionerSpec", "partition_from_spec",
+    "parse_spec_text",
+    "SingleConfig", "RandomConfig", "LpaConfig", "MetisConfig",
+    "LeidenFusionConfig",
+    # v1 shims + functional forms
     "PARTITIONERS", "get_partitioner", "lpa_partition", "metis_partition",
     "random_partition", "single_partition", "with_fusion",
     "split_into_components",

@@ -112,11 +112,15 @@ def fuse(g: Graph, labels: np.ndarray, k: int, max_part_size: float,
 
 
 def leiden_fusion(g: Graph, k: int, alpha: float = 0.05, beta: float = 0.5,
-                  seed: int = 0) -> np.ndarray:
+                  seed: int = 0, gamma: float = 1.0) -> np.ndarray:
     """Algorithm 1 — the full Leiden-Fusion partitioner.
 
-    max_part_size = (n/k)(1+alpha);  Leiden cap = beta * max_part_size.
+    max_part_size = (n/k)(1+alpha);  Leiden cap = beta * max_part_size;
+    ``gamma`` is the Leiden modularity resolution (higher -> more, smaller
+    communities entering the fusion stage). Exposed through the v2 spec
+    grammar as ``"leiden_fusion(resolution=...)"``.
     """
     max_part_size = (g.n / k) * (1.0 + alpha)
-    labels = leiden(g, max_community_size=beta * max_part_size, seed=seed)
+    labels = leiden(g, max_community_size=beta * max_part_size, seed=seed,
+                    gamma=gamma)
     return fuse(g, labels, k, max_part_size)

@@ -123,8 +123,12 @@ def leiden(g: Graph, max_community_size: Optional[float] = None,
     """Run size-capped Leiden; returns community labels (n,) int64.
 
     ``max_community_size`` is measured in original-graph nodes (the paper's
-    ``S = beta * max_part_size``). ``None`` = uncapped.
+    ``S = beta * max_part_size``). ``None`` = uncapped. ``gamma`` is the
+    modularity resolution (the spec grammar's ``resolution=`` field): higher
+    values favor more, smaller communities.
     """
+    if not gamma > 0:
+        raise ValueError(f"gamma (resolution) must be > 0, got {gamma}")
     rng = np.random.default_rng(seed)
     two_m = 2.0 * g.m
     if two_m <= 0:

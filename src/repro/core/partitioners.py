@@ -13,18 +13,32 @@
   partition into its connected components, then run community Fusion down
   to k partitions.
 - ``leiden_fusion``     — re-exported from :mod:`repro.core.fusion`.
+
+Every method is registered in the Partitioner API v2 registry
+(:mod:`repro.core.registry`) with a frozen config dataclass and capability
+flags, and is selectable through spec strings (:mod:`repro.core.spec`):
+``"lpa(max_iter=30)"``, ``"metis+f(alpha=0.1)"``,
+``"leiden_fusion(resolution=0.5)"``. The old ``PARTITIONERS`` dict and
+``get_partitioner`` remain as deprecation shims.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+import dataclasses
+import warnings
+from typing import Callable, Iterator, Mapping, Optional
 
 import numpy as np
 
 from .fusion import fuse, leiden_fusion
 from .graph import Graph
+from .registry import (Capabilities, FusionConfig, NullConfig,
+                       register_partitioner)
 
 __all__ = ["random_partition", "single_partition", "lpa_partition",
            "metis_partition", "leiden_fusion", "with_fusion",
+           "split_into_components",
+           "SingleConfig", "RandomConfig", "LpaConfig", "MetisConfig",
+           "LeidenFusionConfig",
            "get_partitioner", "PARTITIONERS"]
 
 
@@ -234,27 +248,181 @@ def split_into_components(g: Graph, labels: np.ndarray) -> np.ndarray:
 def with_fusion(base: Callable[..., np.ndarray], g: Graph, k: int,
                 alpha: float = 0.05, seed: int = 0,
                 base_k: Optional[int] = None) -> np.ndarray:
-    """Run ``base`` (with base_k or k target), split into components, fuse to k."""
+    """Run ``base`` (with base_k or k target), split into components, fuse to k.
+
+    Functional form of the spec-level ``+f`` combinator
+    (``"metis+f(alpha=0.1)"``), kept for direct calls with unregistered
+    bases.
+    """
     labels = base(g, base_k or k, seed=seed)
     comms = split_into_components(g, labels)
     max_part_size = (g.n / k) * (1.0 + alpha)
     return fuse(g, comms, k, max_part_size)
 
 
-PARTITIONERS: Dict[str, Callable[..., np.ndarray]] = {
-    "single": single_partition,
-    "random": random_partition,
-    "lpa": lpa_partition,
-    "metis": metis_partition,
-    "leiden_fusion": leiden_fusion,
-    "metis_f": lambda g, k, seed=0: with_fusion(metis_partition, g, k, seed=seed),
-    "lpa_f": lambda g, k, seed=0: with_fusion(lpa_partition, g, k, seed=seed),
-}
+# ---------------------------------------------------------------------------
+# typed configs + registry entries (Partitioner API v2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SingleConfig:
+    """The centralized reference has no hyperparameters."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomConfig:
+    """Uniform random assignment has no hyperparameters."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LpaConfig:
+    max_iter: int = dataclasses.field(
+        default=50, metadata={"help": "propagation sweeps before giving up"})
+    balance_cap: float = dataclasses.field(
+        default=1.10, metadata={"help": "soft size cap as a multiple of n/k"})
+
+    def __post_init__(self):
+        if self.max_iter < 1:
+            raise ValueError(f"max_iter must be >= 1, got {self.max_iter}")
+        if self.balance_cap < 1.0:
+            raise ValueError(f"balance_cap must be >= 1.0, "
+                             f"got {self.balance_cap}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetisConfig:
+    coarsen_to: int = dataclasses.field(
+        default=400, metadata={"help": "stop coarsening below this many "
+                                       "nodes"})
+
+    def __post_init__(self):
+        if self.coarsen_to < 1:
+            raise ValueError(f"coarsen_to must be >= 1, "
+                             f"got {self.coarsen_to}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LeidenFusionConfig:
+    alpha: float = dataclasses.field(
+        default=0.05, metadata={"help": "balance slack: max part size is "
+                                        "(n/k)*(1+alpha)"})
+    beta: float = dataclasses.field(
+        default=0.5, metadata={"help": "Leiden community size cap as a "
+                                       "fraction of max part size"})
+    resolution: float = dataclasses.field(
+        default=1.0, metadata={"help": "Leiden modularity resolution gamma"})
+
+    def __post_init__(self):
+        if not (self.alpha >= 0.0):
+            raise ValueError(f"alpha must be >= 0, got {self.alpha}")
+        if not (0.0 < self.beta <= 1.0):
+            raise ValueError(f"beta must be in (0, 1], got {self.beta}")
+        if not (self.resolution > 0.0):
+            raise ValueError(f"resolution must be > 0, "
+                             f"got {self.resolution}")
+
+
+@register_partitioner(
+    "single", config=SingleConfig,
+    capabilities=Capabilities(connectivity_guaranteed=True, balanced=False),
+    doc="everything in one partition — the centralized reference")
+def _single(g: Graph, k: int, seed: int, cfg: SingleConfig) -> np.ndarray:
+    return single_partition(g, k, seed=seed)
+
+
+@register_partitioner(
+    "random", config=RandomConfig,
+    capabilities=Capabilities(connectivity_guaranteed=False, balanced=False),
+    doc="uniform random node assignment (paper §3.1 baseline)")
+def _random(g: Graph, k: int, seed: int, cfg: RandomConfig) -> np.ndarray:
+    return random_partition(g, k, seed=seed)
+
+
+@register_partitioner(
+    "lpa", config=LpaConfig,
+    capabilities=Capabilities(connectivity_guaranteed=False, balanced=True),
+    doc="label propagation with k initial labels (Spark Local baseline)")
+def _lpa(g: Graph, k: int, seed: int, cfg: LpaConfig) -> np.ndarray:
+    return lpa_partition(g, k, seed=seed, max_iter=cfg.max_iter,
+                         balance_cap=cfg.balance_cap)
+
+
+@register_partitioner(
+    "metis", config=MetisConfig,
+    capabilities=Capabilities(connectivity_guaranteed=False, balanced=True),
+    doc="multilevel k-way partitioning (METIS family)")
+def _metis(g: Graph, k: int, seed: int, cfg: MetisConfig) -> np.ndarray:
+    return metis_partition(g, k, seed=seed, coarsen_to=cfg.coarsen_to)
+
+
+@register_partitioner(
+    "leiden_fusion", config=LeidenFusionConfig,
+    capabilities=Capabilities(connectivity_guaranteed=True, balanced=True),
+    doc="the paper's method: size-capped Leiden + community Fusion")
+def _leiden_fusion(g: Graph, k: int, seed: int,
+                   cfg: LeidenFusionConfig) -> np.ndarray:
+    return leiden_fusion(g, k, alpha=cfg.alpha, beta=cfg.beta, seed=seed,
+                         gamma=cfg.resolution)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims — the closed v1 API, kept for old call-sites
+# ---------------------------------------------------------------------------
+
+_LEGACY_NAMES = ("single", "random", "lpa", "metis", "leiden_fusion",
+                 "metis_f", "lpa_f")
+
+
+def _warn_deprecated(what: str) -> None:
+    warnings.warn(
+        f"{what} is deprecated; use repro.core.partition_from_spec / "
+        f"PartitionerSpec.parse (spec strings like \"lpa+f(alpha=0.1)\")",
+        DeprecationWarning, stacklevel=3)
+
+
+def _legacy_callable(name: str) -> Callable[..., np.ndarray]:
+    if name not in _LEGACY_NAMES:
+        raise KeyError(f"unknown partitioner {name!r}; "
+                       f"available: {sorted(_LEGACY_NAMES)}")
+
+    def call(g: Graph, k: int, seed: int = 0, **overrides) -> np.ndarray:
+        from .spec import PartitionerSpec
+        spec = PartitionerSpec.parse(name)
+        if overrides:
+            spec = dataclasses.replace(
+                spec, config=dataclasses.replace(spec.config, **overrides))
+        return spec.partition(g, k, seed=seed).labels
+
+    call.__name__ = f"{name}_partitioner"
+    call.__qualname__ = call.__name__
+    return call
+
+
+class _DeprecatedPartitioners(Mapping):
+    """v1 ``PARTITIONERS`` dict shim: item access warns and returns a bare
+    ``(g, k, seed) -> labels`` callable backed by the v2 registry."""
+
+    def __getitem__(self, name: str) -> Callable[..., np.ndarray]:
+        fn = _legacy_callable(name)         # KeyError before the warning
+        _warn_deprecated(f"PARTITIONERS[{name!r}]")
+        return fn
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(_LEGACY_NAMES)
+
+    def __len__(self) -> int:
+        return len(_LEGACY_NAMES)
+
+    def __repr__(self) -> str:
+        return f"PARTITIONERS({', '.join(_LEGACY_NAMES)})"
+
+
+PARTITIONERS = _DeprecatedPartitioners()
 
 
 def get_partitioner(name: str) -> Callable[..., np.ndarray]:
-    try:
-        return PARTITIONERS[name]
-    except KeyError:
-        raise KeyError(f"unknown partitioner {name!r}; "
-                       f"available: {sorted(PARTITIONERS)}")
+    """Deprecated v1 lookup; use spec strings via
+    :func:`repro.core.partition_from_spec` instead."""
+    fn = _legacy_callable(name)             # KeyError before the warning
+    _warn_deprecated(f"get_partitioner({name!r})")
+    return fn

@@ -28,8 +28,8 @@ import numpy as np
 
 def train_gnn(args) -> dict:
     from repro.core import (build_partition_batch, evaluate_partition,
-                            get_partitioner, make_arxiv_like,
-                            make_proteins_like)
+                            make_arxiv_like, make_proteins_like,
+                            partition_from_spec)
     from repro.gnn import GNNConfig, train_classifier, train_local
 
     t0 = time.time()
@@ -37,10 +37,9 @@ def train_gnn(args) -> dict:
         ds = make_arxiv_like(n=args.nodes, seed=args.seed)
     else:
         ds = make_proteins_like(n=args.nodes or 6000, seed=args.seed)
-    partitioner = get_partitioner(args.partitioner)
-    t1 = time.time()
-    labels = partitioner(ds.graph, args.k, seed=args.seed)
-    t_part = time.time() - t1
+    result = partition_from_spec(ds.graph, args.partitioner, args.k,
+                                 seed=args.seed)
+    labels, t_part = result.labels, result.seconds
     report = evaluate_partition(ds.graph, labels)
     batch = build_partition_batch(ds.graph, labels, scheme=args.scheme)
     cfg = GNNConfig(kind=args.model, feature_dim=ds.features.shape[1],
@@ -52,7 +51,7 @@ def train_gnn(args) -> dict:
     t_train = time.time() - t2
     res = train_classifier(ds, emb, epochs=150, seed=args.seed)
     out = {
-        "workload": "gnn", "dataset": ds.name, "partitioner": args.partitioner,
+        "workload": "gnn", "dataset": ds.name, "partitioner": result.spec,
         "k": args.k, "scheme": args.scheme, "model": args.model,
         "partition_time_s": round(t_part, 2),
         "train_time_s": round(t_train, 2),
@@ -107,7 +106,9 @@ def main():
     ap.add_argument("--dataset", default="arxiv_like",
                     choices=["arxiv_like", "proteins_like"])
     ap.add_argument("--nodes", type=int, default=8000)
-    ap.add_argument("--partitioner", default="leiden_fusion")
+    ap.add_argument("--partitioner", default="leiden_fusion",
+                    help="partitioner spec string, e.g. "
+                         "\"lpa+f(alpha=0.1)\" (DESIGN.md §9)")
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--scheme", default="repli", choices=["inner", "repli"])
     ap.add_argument("--model", default="gcn", choices=["gcn", "sage"])

@@ -6,18 +6,28 @@ the repo the same shape (DESIGN.md §1). Two artifact kinds live under one
 cache directory as content-addressed ``.npz`` bundles:
 
 * **labels bundle** — the raw partition assignment, keyed by
-  ``(graph_hash, method, k, seed)``. This is the expensive stage (Leiden +
-  fusion is minutes on paper-scale graphs), so it is cached independently of
-  the assembly scheme: ``inner`` and ``repli`` runs share one partitioning.
+  ``(graph_hash, canonical spec, config fingerprint, k, seed)``. This is the
+  expensive stage (Leiden + fusion is minutes on paper-scale graphs), so it
+  is cached independently of the assembly scheme: ``inner`` and ``repli``
+  runs share one partitioning.
 * **batch bundle** — the padded :class:`~repro.core.PartitionBatch` tensors
   (plus the halo exchange spec when requested), keyed additionally by
   ``scheme``.
 
+``method`` accepts any Partitioner API v2 spec string (DESIGN.md §9) —
+``"metis"``, ``"lpa+f(alpha=0.1)"``, ``"leiden_fusion(resolution=0.5)"`` —
+or an already-parsed :class:`~repro.core.PartitionerSpec`. The cache key
+embeds the spec's config *fingerprint* (a hash over the fully-resolved
+config, defaults included), so differently-parameterized runs of the same
+method land in distinct bundles; v1 keyed only ``(method, k, seed)`` and
+collided them.
+
 Filenames embed a human-readable prefix plus the first 16 hex chars of the
 key digest; the digest covers a format-version field, so bumping
-``ARTIFACT_VERSION`` silently invalidates stale bundles. Writes are atomic
-(tmp file + ``os.replace``); loads validate the embedded metadata against the
-requested key and treat any mismatch as a miss.
+``ARTIFACT_VERSION`` silently invalidates stale bundles (v2: fingerprint
+keys). Writes are atomic (tmp file + ``os.replace``); loads validate the
+embedded metadata against the requested key and treat any mismatch as a
+miss.
 """
 from __future__ import annotations
 
@@ -25,15 +35,16 @@ import dataclasses
 import json
 import logging
 import os
+import re
 import tempfile
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import (Graph, HaloExchangeSpec, PartitionBatch,
-                        build_halo_exchange, build_partition_batch,
-                        get_partitioner)
+                        PartitionerSpec, build_halo_exchange,
+                        build_partition_batch, partition_from_spec)
 
 from .datasets import graph_fingerprint
 
@@ -42,10 +53,12 @@ __all__ = ["ARTIFACT_VERSION", "ArtifactBundle", "PartitionArtifactStore",
 
 log = logging.getLogger("repro.pipeline")
 
-ARTIFACT_VERSION = 1
+ARTIFACT_VERSION = 2
 
 _BATCH_FIELDS = ("node_ids", "node_mask", "owned_mask", "edge_src",
                  "edge_dst", "edge_weight", "in_degree")
+
+SpecLike = Union[str, PartitionerSpec]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +73,8 @@ class ArtifactBundle:
     batch_path: Optional[str]
     partition_seconds: float
     assemble_seconds: float
+    spec: str = ""                  # canonical partitioner spec
+    fingerprint: str = ""           # the spec's config fingerprint
 
 
 def _digest(meta: Dict[str, Any]) -> str:
@@ -68,14 +83,21 @@ def _digest(meta: Dict[str, Any]) -> str:
     return hashlib.sha256(blob).hexdigest()[:16]
 
 
-def compute_bundle(g: Graph, method: str, k: int, seed: int, scheme: str,
-                   with_halo: bool = False,
+def _spec_slug(spec: PartitionerSpec) -> str:
+    """Filesystem-safe, human-readable prefix from the canonical spec."""
+    slug = re.sub(r"[^A-Za-z0-9_.+=-]+", "_", spec.canonical()).strip("_")
+    return slug[:60] or "partition"
+
+
+def compute_bundle(g: Graph, method: SpecLike, k: int, seed: int,
+                   scheme: str, with_halo: bool = False,
                    labels: Optional[np.ndarray] = None) -> ArtifactBundle:
     """Storeless path: run partitioner + assembly directly (no caching)."""
-    t0 = time.time()
+    spec = PartitionerSpec.parse(method)
+    t_part = 0.0
     if labels is None:
-        labels = get_partitioner(method)(g, k, seed=seed)
-    t_part = time.time() - t0
+        result = partition_from_spec(g, spec, k, seed)
+        labels, t_part = result.labels, result.seconds
     t0 = time.time()
     batch = build_partition_batch(g, labels, scheme=scheme)
     halo = build_halo_exchange(g, labels, batch) if with_halo else None
@@ -83,7 +105,9 @@ def compute_bundle(g: Graph, method: str, k: int, seed: int, scheme: str,
                           labels_hit=False, batch_hit=False,
                           labels_path=None, batch_path=None,
                           partition_seconds=t_part,
-                          assemble_seconds=time.time() - t0)
+                          assemble_seconds=time.time() - t0,
+                          spec=spec.canonical(),
+                          fingerprint=spec.fingerprint())
 
 
 class PartitionArtifactStore:
@@ -94,24 +118,24 @@ class PartitionArtifactStore:
         os.makedirs(self.cache_dir, exist_ok=True)
 
     # ----- key/paths -------------------------------------------------------
-    def _labels_meta(self, graph_hash: str, method: str, k: int, seed: int
-                     ) -> Dict[str, Any]:
+    def _labels_meta(self, graph_hash: str, spec: PartitionerSpec, k: int,
+                     seed: int) -> Dict[str, Any]:
         return {"kind": "labels", "version": ARTIFACT_VERSION,
-                "graph": graph_hash, "method": method, "k": int(k),
+                "graph": graph_hash, "spec": spec.canonical(),
+                "config_fp": spec.fingerprint(), "k": int(k),
                 "seed": int(seed)}
 
-    def _batch_meta(self, graph_hash: str, method: str, k: int, seed: int,
-                    scheme: str) -> Dict[str, Any]:
+    def _batch_meta(self, graph_hash: str, spec: PartitionerSpec, k: int,
+                    seed: int, scheme: str) -> Dict[str, Any]:
         return {"kind": "batch", "version": ARTIFACT_VERSION,
-                "graph": graph_hash, "method": method, "k": int(k),
+                "graph": graph_hash, "spec": spec.canonical(),
+                "config_fp": spec.fingerprint(), "k": int(k),
                 "seed": int(seed), "scheme": scheme}
 
-    def _path(self, meta: Dict[str, Any]) -> str:
-        if meta["kind"] == "labels":
-            stem = f"labels-{meta['method']}-k{meta['k']}-s{meta['seed']}"
-        else:
-            stem = (f"batch-{meta['method']}-k{meta['k']}-s{meta['seed']}"
-                    f"-{meta['scheme']}")
+    def _path(self, meta: Dict[str, Any], spec: PartitionerSpec) -> str:
+        stem = f"{meta['kind']}-{_spec_slug(spec)}-k{meta['k']}-s{meta['seed']}"
+        if meta["kind"] == "batch":
+            stem += f"-{meta['scheme']}"
         return os.path.join(self.cache_dir, f"{stem}-{_digest(meta)}.npz")
 
     # ----- low-level IO ----------------------------------------------------
@@ -146,39 +170,41 @@ class PartitionArtifactStore:
         return data
 
     # ----- labels ----------------------------------------------------------
-    def load_or_partition(self, g: Graph, method: str, k: int, seed: int,
+    def load_or_partition(self, g: Graph, method: SpecLike, k: int, seed: int,
                           graph_hash: Optional[str] = None
                           ) -> Tuple[np.ndarray, bool, str, float]:
         """Returns (labels, cache_hit, path, partition_seconds)."""
+        spec = PartitionerSpec.parse(method)
         graph_hash = graph_hash or graph_fingerprint(g)
-        meta = self._labels_meta(graph_hash, method, k, seed)
-        path = self._path(meta)
+        meta = self._labels_meta(graph_hash, spec, k, seed)
+        path = self._path(meta, spec)
         data = self._load_npz(path, meta)
         if data is not None:
-            log.info("partition cache HIT: %s (method=%s k=%d seed=%d) — "
-                     "skipping re-partition", path, method, k, seed)
+            log.info("partition cache HIT: %s (spec=%s fp=%s k=%d seed=%d) "
+                     "— skipping re-partition", path, spec.canonical(),
+                     spec.fingerprint(), k, seed)
             return data["labels"].astype(np.int64), True, path, 0.0
         log.info("partition cache MISS: computing %s k=%d seed=%d",
-                 method, k, seed)
-        t0 = time.time()
-        labels = get_partitioner(method)(g, k, seed=seed)
-        secs = time.time() - t0
-        self._atomic_savez(path, labels=labels.astype(np.int64),
+                 spec.canonical(), k, seed)
+        result = partition_from_spec(g, spec, k, seed)
+        self._atomic_savez(path, labels=result.labels,
                            meta_json=np.asarray(json.dumps(meta)))
-        log.info("partition artifact saved: %s (%.2fs)", path, secs)
-        return labels, False, path, secs
+        log.info("partition artifact saved: %s (%.2fs)", path,
+                 result.seconds)
+        return result.labels, False, path, result.seconds
 
     # ----- batch -----------------------------------------------------------
-    def load_or_assemble(self, g: Graph, labels: np.ndarray, method: str,
-                         k: int, seed: int, scheme: str,
+    def load_or_assemble(self, g: Graph, labels: np.ndarray,
+                         method: SpecLike, k: int, seed: int, scheme: str,
                          with_halo: bool = False,
                          graph_hash: Optional[str] = None
                          ) -> Tuple[PartitionBatch, Optional[HaloExchangeSpec],
                                     bool, str, float]:
         """Returns (batch, halo, cache_hit, path, assemble_seconds)."""
+        spec = PartitionerSpec.parse(method)
         graph_hash = graph_hash or graph_fingerprint(g)
-        meta = self._batch_meta(graph_hash, method, k, seed, scheme)
-        path = self._path(meta)
+        meta = self._batch_meta(graph_hash, spec, k, seed, scheme)
+        path = self._path(meta, spec)
         data = self._load_npz(path, meta)
         if data is not None:
             batch = PartitionBatch(
@@ -221,20 +247,23 @@ class PartitionArtifactStore:
                            **arrays)
 
     # ----- the one-call API ------------------------------------------------
-    def load_or_compute(self, g: Graph, method: str, k: int, seed: int,
+    def load_or_compute(self, g: Graph, method: SpecLike, k: int, seed: int,
                         scheme: str, with_halo: bool = False
                         ) -> ArtifactBundle:
+        spec = PartitionerSpec.parse(method)
         graph_hash = graph_fingerprint(g)
         labels, lhit, lpath, t_part = self.load_or_partition(
-            g, method, k, seed, graph_hash=graph_hash)
+            g, spec, k, seed, graph_hash=graph_hash)
         batch, halo, bhit, bpath, t_asm = self.load_or_assemble(
-            g, labels, method, k, seed, scheme, with_halo=with_halo,
+            g, labels, spec, k, seed, scheme, with_halo=with_halo,
             graph_hash=graph_hash)
         return ArtifactBundle(labels=labels, batch=batch, halo=halo,
                               labels_hit=lhit, batch_hit=bhit,
                               labels_path=lpath, batch_path=bpath,
                               partition_seconds=t_part,
-                              assemble_seconds=t_asm)
+                              assemble_seconds=t_asm,
+                              spec=spec.canonical(),
+                              fingerprint=spec.fingerprint())
 
     # ----- maintenance -----------------------------------------------------
     def entries(self):

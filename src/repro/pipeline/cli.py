@@ -1,14 +1,22 @@
 """CLI for the end-to-end pipeline.
 
     PYTHONPATH=src python -m repro.pipeline run \
-        --dataset karate --method leiden_fusion --k 4 --mode local
+        --dataset karate --method "lpa+f(alpha=0.1)" --k 4 --mode local
 
+    PYTHONPATH=src python -m repro.pipeline partitioners
     PYTHONPATH=src python -m repro.pipeline cache --list
     PYTHONPATH=src python -m repro.pipeline cache --clear
 
+``--method`` accepts any Partitioner API v2 spec string (DESIGN.md §9):
+``method``, ``method(field=value,...)``, optionally followed by the ``+f``
+fusion combinator — ``"metis"``, ``"lpa(max_iter=30)+f(alpha=0.1)"``,
+``"leiden_fusion(resolution=0.5)"``. ``partitioners`` lists the registry
+with each method's config schema, defaults, and capability flags.
+
 Partition artifacts land under ``--cache-dir`` (default
-``~/.cache/repro/partitions``); a second run with the same dataset/method/
-k/seed logs a cache hit and skips re-partitioning.
+``~/.cache/repro/partitions``); a second run with the same dataset/spec/
+k/seed logs a cache hit and skips re-partitioning. The key includes the
+spec's config fingerprint, so changing any hyperparameter is a cache miss.
 """
 from __future__ import annotations
 
@@ -35,8 +43,10 @@ def _build_parser() -> argparse.ArgumentParser:
     run.add_argument("--nodes", type=int, default=None,
                      help="node count override for synthetic datasets")
     run.add_argument("--method", default="leiden_fusion",
-                     help="partitioner: leiden_fusion | metis | lpa | "
-                          "random | metis_f | lpa_f | single")
+                     help="partitioner spec, e.g. leiden_fusion | metis | "
+                          "\"lpa+f(alpha=0.1)\" | "
+                          "\"leiden_fusion(resolution=0.5)\" — see the "
+                          "'partitioners' subcommand for the registry")
     run.add_argument("--k", type=int, default=8)
     run.add_argument("--seed", type=int, default=0)
     run.add_argument("--scheme", default="repli", choices=["inner", "repli"])
@@ -64,6 +74,13 @@ def _build_parser() -> argparse.ArgumentParser:
     cache.add_argument("--cache-dir", default=DEFAULT_CACHE)
     cache.add_argument("--list", action="store_true", default=True)
     cache.add_argument("--clear", action="store_true")
+
+    part = sub.add_parser(
+        "partitioners",
+        help="list registered partitioners with config schemas and "
+             "capability flags")
+    part.add_argument("--json", action="store_true",
+                      help="machine-readable schema dump")
     return ap
 
 
@@ -112,12 +129,66 @@ def _cmd_cache(args: argparse.Namespace) -> int:
     return 0
 
 
+def _config_schema(config_type) -> dict:
+    import dataclasses
+    out = {}
+    for f in dataclasses.fields(config_type):
+        default = f.default if f.default is not dataclasses.MISSING else None
+        hint = f.metadata.get("help", "")
+        type_name = getattr(f.type, "__name__", str(f.type))
+        out[f.name] = {"type": type_name, "default": default, "help": hint}
+    return out
+
+
+def _cmd_partitioners(args: argparse.Namespace) -> int:
+    import dataclasses
+    from repro.core import FusionConfig, registered_partitioners
+    entries = registered_partitioners()
+    if args.json:
+        import json
+        payload = {
+            name: {
+                "capabilities": dataclasses.asdict(e.capabilities),
+                "config": e.config_type.__name__,
+                "fields": _config_schema(e.config_type),
+                "doc": e.doc,
+            } for name, e in entries.items()}
+        payload["+f"] = {
+            "doc": "fusion combinator over any base method (paper §5.4)",
+            "config": FusionConfig.__name__,
+            "fields": _config_schema(FusionConfig)}
+        print(json.dumps(payload, indent=2))
+        return 0
+    for name, e in entries.items():
+        print(f"{name:16s} [{e.capabilities.describe()}]  {e.doc}")
+        schema = _config_schema(e.config_type)
+        if not schema:
+            print(f"{'':16s}   (no config fields)")
+        for field, info in schema.items():
+            hint = f"  — {info['help']}" if info["help"] else ""
+            print(f"{'':16s}   {field}: {info['type']} = "
+                  f"{info['default']!r}{hint}")
+    print()
+    print("+f               fusion combinator: any spec may end in "
+          "\"+f(...)\" (paper §5.4)")
+    for field, info in _config_schema(FusionConfig).items():
+        hint = f"  — {info['help']}" if info["help"] else ""
+        print(f"{'':16s}   {field}: {info['type']} = "
+              f"{info['default']!r}{hint}")
+    print()
+    print("spec grammar: method | method(field=value,...) | base+f | "
+          "base(...)+f(field=value,...)")
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     logging.basicConfig(level=logging.INFO,
                         format="%(levelname)s %(name)s: %(message)s")
     args = _build_parser().parse_args(argv)
     if args.cmd == "run":
         return _cmd_run(args)
+    if args.cmd == "partitioners":
+        return _cmd_partitioners(args)
     return _cmd_cache(args)
 
 

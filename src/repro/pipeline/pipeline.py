@@ -17,7 +17,7 @@ import logging
 import time
 from typing import Any, Dict, Mapping, Optional
 
-from repro.core import NodeDataset, evaluate_partition
+from repro.core import NodeDataset, PartitionerSpec, evaluate_partition
 from repro.gnn import GNNConfig, train_classifier, train_local, train_sync
 
 from .artifacts import ArtifactBundle, PartitionArtifactStore, compute_bundle
@@ -32,7 +32,9 @@ log = logging.getLogger("repro.pipeline")
 class PipelineConfig:
     """One run of the end-to-end pipeline. Mirrors the CLI flags 1:1."""
     dataset: str = "arxiv-like"
-    method: str = "leiden_fusion"   # any key of repro.core.PARTITIONERS
+    method: str = "leiden_fusion"   # partitioner spec string (DESIGN.md §9),
+                                    # e.g. "metis", "lpa+f(alpha=0.1)",
+                                    # "leiden_fusion(resolution=0.5)"
     k: int = 8
     seed: int = 0
     scheme: str = "repli"           # "inner" | "repli" (sync forces repli)
@@ -74,6 +76,7 @@ class PipelineReport:
     accuracy: Dict[str, float]       # train/val/test (empty if skipped)
     timings: Dict[str, float]
     checkpoint_path: Optional[str] = None
+    partition_fingerprint: Optional[str] = None   # spec config fingerprint
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -84,8 +87,10 @@ class PipelineReport:
         lines.append(f"  dataset      {self.dataset} (n={self.num_nodes}, "
                      f"edges={self.num_edges})")
         hit = "HIT" if self.partition_cache_hit else "miss"
+        fp = f" fp={self.partition_fingerprint}" \
+            if self.partition_fingerprint else ""
         lines.append(f"  partition    {c['method']} k={c['k']} "
-                     f"seed={c['seed']} [cache {hit}]")
+                     f"seed={c['seed']}{fp} [cache {hit}]")
         p = self.partition
         lines.append(f"               cut={p['edge_cut_pct']:.1f}% "
                      f"components={p['total_components']} "
@@ -160,6 +165,9 @@ class Pipeline:
             raise ValueError(f"mode must be local|sync, got {cfg.mode!r}")
         if cfg.k < 1:
             raise ValueError(f"k must be >= 1, got {cfg.k}")
+        # resolve the partitioner spec up front: a bad method string fails
+        # here, before any dataset/partition work happens
+        spec = PartitionerSpec.parse(cfg.method)
         scheme = cfg.scheme
         if cfg.mode == "sync" and scheme != "repli":
             log.info("sync mode requires halo replicas — forcing "
@@ -179,10 +187,10 @@ class Pipeline:
         need_halo = cfg.mode == "sync"
         if self.store is not None:
             bundle = self.store.load_or_compute(
-                ds.graph, cfg.method, cfg.k, cfg.seed, scheme,
+                ds.graph, spec, cfg.k, cfg.seed, scheme,
                 with_halo=need_halo)
         else:
-            bundle = compute_bundle(ds.graph, cfg.method, cfg.k, cfg.seed,
+            bundle = compute_bundle(ds.graph, spec, cfg.k, cfg.seed,
                                     scheme, with_halo=need_halo)
         timings["partition"] = bundle.partition_seconds
         timings["assemble"] = bundle.assemble_seconds
@@ -237,6 +245,7 @@ class Pipeline:
         src_once = ds.graph.num_arcs // 2
         return PipelineReport(
             config={**dataclasses.asdict(cfg), "scheme": scheme,
+                    "method": spec.canonical(),
                     "dataset_kwargs": dict(cfg.dataset_kwargs)},
             dataset=ds.name,
             num_nodes=int(ds.graph.n),
@@ -253,4 +262,5 @@ class Pipeline:
             accuracy={k: float(v) for k, v in accuracy.items()},
             timings={k: round(v, 4) for k, v in timings.items()},
             checkpoint_path=checkpoint_path,
+            partition_fingerprint=bundle.fingerprint or spec.fingerprint(),
         )

@@ -1,0 +1,439 @@
+"""Partitioner API v2: spec grammar, open registry, capabilities,
+fingerprints, and the v1 deprecation shims (DESIGN.md §9)."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Capabilities, FusionConfig, LeidenFusionConfig,
+                        LpaConfig, MetisConfig, PARTITIONERS, Partitioner,
+                        PartitionerSpec, PartitionResult, evaluate_partition,
+                        get_entry, get_partitioner, karate_club,
+                        make_arxiv_like, partition_from_spec,
+                        register_partitioner, registered_partitioners,
+                        unregister_partitioner)
+
+BUILTINS = ("leiden_fusion", "lpa", "metis", "random", "single")
+
+
+# ---------------------------------------------------------------------------
+# grammar: parse
+# ---------------------------------------------------------------------------
+def test_parse_bare_method_gets_default_config():
+    s = PartitionerSpec.parse("metis")
+    assert s.method == "metis"
+    assert s.config == MetisConfig()
+    assert s.fusion is None
+
+
+def test_parse_configured():
+    s = PartitionerSpec.parse("lpa(max_iter=30,balance_cap=1.5)")
+    assert s.config == LpaConfig(max_iter=30, balance_cap=1.5)
+
+
+def test_parse_normalizes_case_hyphens_whitespace():
+    s = PartitionerSpec.parse("  Leiden-Fusion ( resolution = 0.5 ) ")
+    assert s.method == "leiden_fusion"
+    assert s.config == LeidenFusionConfig(resolution=0.5)
+    assert PartitionerSpec.parse("LPA + F").fusion == FusionConfig()
+
+
+def test_parse_fusion_combinator_forms():
+    bare = PartitionerSpec.parse("metis+f")
+    assert bare.fusion == FusionConfig()
+    cfgd = PartitionerSpec.parse("lpa(max_iter=20)+f(alpha=0.1,base_k=32)")
+    assert cfgd.config == LpaConfig(max_iter=20)
+    assert cfgd.fusion == FusionConfig(alpha=0.1, base_k=32)
+
+
+def test_parse_int_coerced_to_float_field():
+    s = PartitionerSpec.parse("leiden_fusion(resolution=2)")
+    assert s.config.resolution == 2.0
+    assert isinstance(s.config.resolution, float)
+
+
+def test_legacy_underscore_f_aliases():
+    assert PartitionerSpec.parse("metis_f").canonical() == "metis+f"
+    assert PartitionerSpec.parse("lpa_f") == PartitionerSpec.parse("lpa+f")
+
+
+def test_parse_accepts_spec_instance():
+    s = PartitionerSpec.parse("metis+f")
+    assert PartitionerSpec.parse(s) is s
+
+
+# ---------------------------------------------------------------------------
+# grammar: canonical formatting
+# ---------------------------------------------------------------------------
+def test_canonical_omits_default_fields():
+    assert PartitionerSpec.parse("lpa(max_iter=50)").canonical() == "lpa"
+    assert PartitionerSpec.parse(
+        "lpa(balance_cap=1.5,max_iter=50)").canonical() == \
+        "lpa(balance_cap=1.5)"
+    assert PartitionerSpec.parse("metis+f(alpha=0.05)").canonical() == \
+        "metis+f"
+
+
+def test_canonical_field_order_is_declaration_order():
+    s = PartitionerSpec.parse("lpa(balance_cap=2.0,max_iter=9)")
+    assert s.canonical() == "lpa(max_iter=9,balance_cap=2.0)"
+
+
+def test_str_is_canonical():
+    assert str(PartitionerSpec.parse("metis_f")) == "metis+f"
+
+
+# ---------------------------------------------------------------------------
+# grammar: errors
+# ---------------------------------------------------------------------------
+def test_unknown_method_lists_available():
+    with pytest.raises(ValueError, match="unknown partitioner 'nope'"):
+        PartitionerSpec.parse("nope")
+    with pytest.raises(ValueError, match="available"):
+        partition_from_spec(karate_club(), "nope", 2)
+
+
+def test_unknown_field_lists_expected():
+    with pytest.raises(ValueError, match="unknown field 'gamma'.*expected.*"
+                                         "max_iter, balance_cap"):
+        PartitionerSpec.parse("lpa(gamma=2)")
+    with pytest.raises(ValueError, match=r"unknown field 'beta'.*lpa\+f"):
+        PartitionerSpec.parse("lpa+f(beta=0.5)")
+
+
+def test_syntax_errors():
+    for bad in ("", "lpa(", "lpa)", "lpa(max_iter)", "lpa(max_iter=1;2)",
+                "lpa(max_iter=1)(x=2)", "lpa+g", "(x=1)"):
+        with pytest.raises(ValueError):
+            PartitionerSpec.parse(bad)
+
+
+def test_duplicate_field_rejected():
+    with pytest.raises(ValueError, match="duplicate field"):
+        PartitionerSpec.parse("lpa(max_iter=1,max_iter=2)")
+
+
+def test_type_mismatch_rejected():
+    with pytest.raises(TypeError, match="max_iter"):
+        PartitionerSpec.parse("lpa(max_iter=1.5)")
+    with pytest.raises(TypeError, match="balance_cap"):
+        PartitionerSpec.parse("lpa(balance_cap=big)")
+
+
+def test_config_validation_runs_on_parse():
+    with pytest.raises(ValueError, match="balance_cap must be >= 1.0"):
+        PartitionerSpec.parse("lpa(balance_cap=0.5)")
+    with pytest.raises(ValueError, match="resolution must be > 0"):
+        PartitionerSpec.parse("leiden_fusion(resolution=0)")
+    with pytest.raises(ValueError, match="alpha must be >= 0"):
+        PartitionerSpec.parse("metis+f(alpha=-0.1)")
+
+
+def test_legacy_alias_with_args_is_an_error():
+    with pytest.raises(ValueError, match=r"metis\+f"):
+        PartitionerSpec.parse("metis_f(alpha=0.1)")
+
+
+# ---------------------------------------------------------------------------
+# grammar: property-based round trip
+# ---------------------------------------------------------------------------
+@st.composite
+def random_specs(draw):
+    """A random well-formed spec string over the built-in registry."""
+    method = BUILTINS[draw(st.integers(0, len(BUILTINS) - 1))]
+    parts = [method]
+    fields = []
+    if method == "lpa":
+        if draw(st.integers(0, 1)):
+            fields.append(f"max_iter={draw(st.integers(1, 99))}")
+        if draw(st.integers(0, 1)):
+            fields.append(f"balance_cap={1.0 + draw(st.integers(0, 300)) / 100}")
+    elif method == "metis":
+        if draw(st.integers(0, 1)):
+            fields.append(f"coarsen_to={draw(st.integers(1, 2000))}")
+    elif method == "leiden_fusion":
+        if draw(st.integers(0, 1)):
+            fields.append(f"alpha={draw(st.integers(0, 100)) / 100}")
+        if draw(st.integers(0, 1)):
+            fields.append(f"beta={(draw(st.integers(0, 99)) + 1) / 100}")
+        if draw(st.integers(0, 1)):
+            fields.append(f"resolution={(draw(st.integers(0, 400)) + 1) / 100}")
+    if fields:
+        pad = " " * draw(st.integers(0, 2))
+        parts.append(f"({pad}{f',{pad}'.join(fields)}{pad})")
+    if draw(st.integers(0, 1)):                  # append the +f combinator
+        parts.append("+f")
+        ffields = []
+        if draw(st.integers(0, 1)):
+            ffields.append(f"alpha={draw(st.integers(0, 100)) / 100}")
+        if draw(st.integers(0, 1)):
+            ffields.append(f"base_k={draw(st.integers(1, 64))}")
+        if ffields:
+            parts.append(f"({','.join(ffields)})")
+    return "".join(parts)
+
+
+@settings(max_examples=60, deadline=None)
+@given(text=random_specs())
+def test_property_spec_round_trip(text):
+    """format(parse(s)) is canonical: re-parsing it gives an equal spec,
+    an equal fingerprint, and an idempotent canonical form."""
+    spec = PartitionerSpec.parse(text)
+    canon = spec.canonical()
+    again = PartitionerSpec.parse(canon)
+    assert again == spec
+    assert again.canonical() == canon
+    assert again.fingerprint() == spec.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+def test_fingerprint_covers_defaults_consistently():
+    assert PartitionerSpec.parse("metis(coarsen_to=400)").fingerprint() == \
+        PartitionerSpec.parse("metis").fingerprint()
+
+
+def test_fingerprint_separates_configs():
+    fps = {PartitionerSpec.parse(s).fingerprint() for s in (
+        "lpa", "lpa(balance_cap=1.1)", "lpa(balance_cap=2.0)",
+        "lpa(max_iter=10)", "lpa+f", "lpa+f(alpha=0.1)", "metis", "metis+f",
+        "leiden_fusion", "leiden_fusion(resolution=0.5)")}
+    assert len(fps) == 9          # lpa(balance_cap=1.1) == lpa (the default)
+
+
+def test_fingerprint_is_stable_value():
+    fp = PartitionerSpec.parse("lpa+f(alpha=0.1)").fingerprint()
+    assert fp == PartitionerSpec.parse("lpa + f ( alpha = 0.1 )").fingerprint()
+    assert len(fp) == 16 and int(fp, 16) >= 0
+
+
+# ---------------------------------------------------------------------------
+# registry + protocol
+# ---------------------------------------------------------------------------
+def test_builtins_registered():
+    assert tuple(registered_partitioners()) == BUILTINS
+
+
+def test_entries_satisfy_protocol():
+    for entry in registered_partitioners().values():
+        assert isinstance(entry, Partitioner)
+        assert dataclasses.is_dataclass(entry.config_type)
+
+
+def test_entry_partition_returns_result():
+    g = karate_club()
+    res = get_entry("metis").partition(g, 2, seed=0)
+    assert isinstance(res, PartitionResult)
+    assert res.labels.shape == (g.n,)
+    assert res.spec == "metis"
+    with pytest.raises(TypeError, match="expects a MetisConfig"):
+        get_entry("metis").partition(g, 2, config=LpaConfig())
+
+
+def test_open_registry_register_and_use():
+    @register_partitioner("stripes", config=LpaConfig,
+                          capabilities=Capabilities(balanced=True),
+                          doc="contiguous equal stripes (test partitioner)")
+    def stripes(g, k, seed, cfg):
+        return (np.arange(g.n) * k // g.n).astype(np.int64)
+
+    try:
+        g = karate_club()
+        res = partition_from_spec(g, "stripes(max_iter=3)", 2)
+        assert res.num_parts == 2
+        # the +f combinator composes over the new method for free
+        rep = evaluate_partition(g, partition_from_spec(g, "stripes+f", 2).labels)
+        assert rep.total_isolated == 0
+        # re-registration guarded
+        with pytest.raises(ValueError, match="already registered"):
+            register_partitioner("stripes")(stripes)
+        register_partitioner("stripes", overwrite=True)(stripes)
+    finally:
+        unregister_partitioner("stripes")
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        PartitionerSpec.parse("stripes")
+
+
+# ---------------------------------------------------------------------------
+# capabilities + the paper's guarantees through the v2 API
+# ---------------------------------------------------------------------------
+def test_string_config_fields_round_trip():
+    """Open-registry methods may declare str fields; quoted values survive
+    commas/equals and canonical formatting re-quotes them."""
+    @dataclasses.dataclass(frozen=True)
+    class TagConfig:
+        tag: str = "x"
+
+    @register_partitioner("tagged", config=TagConfig)
+    def tagged(g, k, seed, cfg):
+        return np.zeros(g.n, dtype=np.int64)
+
+    try:
+        s = PartitionerSpec.parse("tagged(tag='a,b=c')")
+        assert s.config.tag == "a,b=c"
+        assert s.canonical() == "tagged(tag='a,b=c')"
+        assert PartitionerSpec.parse(s.canonical()) == s
+        # barewords stay unquoted; keyword-like strings get quoted
+        assert PartitionerSpec.parse("tagged(tag=word)").canonical() == \
+            "tagged(tag=word)"
+        spec = PartitionerSpec(method="tagged", config=TagConfig(tag="none"))
+        assert spec.canonical() == "tagged(tag='none')"
+        assert PartitionerSpec.parse(spec.canonical()) == spec
+        # parens inside quoted values survive the grammar too
+        parens = PartitionerSpec(method="tagged", config=TagConfig(tag="(x)"))
+        assert PartitionerSpec.parse(parens.canonical()) == parens
+    finally:
+        unregister_partitioner("tagged")
+
+
+def test_coercion_handles_pep604_unions():
+    """`int | None` (PEP 604) fields validate like Optional[int]."""
+    @dataclasses.dataclass(frozen=True)
+    class NewConfig:
+        cap: int | None = None
+
+    @register_partitioner("newstyle", config=NewConfig)
+    def newstyle(g, k, seed, cfg):
+        return np.zeros(g.n, dtype=np.int64)
+
+    try:
+        assert PartitionerSpec.parse("newstyle(cap=none)").config.cap is None
+        parsed = PartitionerSpec.parse("newstyle(cap=2.0)").config.cap
+        assert parsed == 2 and isinstance(parsed, int)
+        with pytest.raises(TypeError, match="cap"):
+            PartitionerSpec.parse("newstyle(cap=1.5)")
+    finally:
+        unregister_partitioner("newstyle")
+
+
+def test_capability_flags():
+    assert PartitionerSpec.parse("leiden_fusion").capabilities \
+        .connectivity_guaranteed
+    assert not PartitionerSpec.parse("metis").capabilities \
+        .connectivity_guaranteed
+    # any +f variant is connectivity-guaranteed, whatever the base; balance
+    # stays the base's claim (fuse's size cap is only best-effort)
+    for base in ("metis", "lpa", "random"):
+        caps = PartitionerSpec.parse(f"{base}+f").capabilities
+        assert caps.connectivity_guaranteed
+        base_caps = PartitionerSpec.parse(base).capabilities
+        assert caps.balanced == base_caps.balanced
+    assert not PartitionerSpec.parse("random+f").capabilities.balanced
+
+
+@pytest.mark.parametrize("karate_spec,arxiv_spec", [
+    # loose alpha on the 34-node karate club, as in the seed tests; metis
+    # additionally over-partitions (base_k) there — at k=4 on 34 nodes it
+    # yields 4 already-connected parts and fusion has nothing to fuse
+    ("leiden_fusion(alpha=0.5)", "leiden_fusion"),
+    ("metis+f(alpha=0.5,base_k=8)", "metis+f"),
+    ("lpa+f(alpha=0.5)", "lpa+f(alpha=0.2)"),
+])
+def test_connectivity_guaranteed_specs_deliver(karate_spec, arxiv_spec):
+    """Capability flags are honest: connectivity-guaranteed specs produce
+    zero isolated nodes and single-component partitions."""
+    cases = ((karate_club(), karate_spec),
+             (make_arxiv_like(n=1000, seed=4).graph, arxiv_spec))
+    for g, spec in cases:
+        assert PartitionerSpec.parse(spec).capabilities \
+            .connectivity_guaranteed
+        res = partition_from_spec(g, spec, 4, seed=0)
+        rep = evaluate_partition(g, res.labels)
+        assert res.num_parts == 4
+        assert rep.total_isolated == 0
+        assert rep.max_components == 1
+
+
+def test_partition_result_provenance_and_determinism():
+    g = karate_club()
+    a = partition_from_spec(g, "lpa+f(alpha=0.1)", 4, seed=3)
+    b = partition_from_spec(g, "lpa + f (alpha=0.1)", 4, seed=3)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    assert a.spec == b.spec == "lpa+f(alpha=0.1)"
+    assert a.fingerprint == b.fingerprint
+    assert a.seconds >= 0 and a.k == 4 and a.seed == 3
+    assert a.provenance["method"] == "lpa"
+    assert "base_seconds" in a.provenance
+    assert "fusion_seconds" in a.provenance
+    assert a.provenance["base_communities"] >= 4
+
+
+def test_resolution_reaches_leiden():
+    g = make_arxiv_like(n=800, seed=1).graph
+    hi = partition_from_spec(g, "leiden_fusion(resolution=4.0)", 4, seed=0)
+    lo = partition_from_spec(g, "leiden_fusion", 4, seed=0)
+    assert hi.fingerprint != lo.fingerprint
+    # the config actually reaches leiden: gamma=4 changes the partition
+    assert not np.array_equal(hi.labels, lo.labels)
+    for res in (hi, lo):
+        rep = evaluate_partition(g, res.labels)
+        assert rep.total_isolated == 0 and rep.max_components == 1
+
+
+def test_base_k_gives_base_method_a_different_target():
+    g = make_arxiv_like(n=800, seed=1).graph
+    res = partition_from_spec(g, "metis+f(base_k=16)", 4, seed=0)
+    assert res.num_parts == 4
+    assert res.provenance["base_communities"] >= 16
+
+
+# ---------------------------------------------------------------------------
+# v1 deprecation shims (pinned behavior)
+# ---------------------------------------------------------------------------
+def test_get_partitioner_shim_warns_and_matches_v2():
+    g = karate_club()
+    with pytest.warns(DeprecationWarning, match="get_partitioner"):
+        fn = get_partitioner("lpa")
+    np.testing.assert_array_equal(
+        fn(g, 2, seed=0), partition_from_spec(g, "lpa", 2, seed=0).labels)
+    # kwargs overrides still reach the typed config
+    np.testing.assert_array_equal(
+        fn(g, 2, seed=0, max_iter=3),
+        partition_from_spec(g, "lpa(max_iter=3)", 2, seed=0).labels)
+
+
+def test_partitioners_dict_shim():
+    g = karate_club()
+    assert set(PARTITIONERS) == {"single", "random", "lpa", "metis",
+                                 "leiden_fusion", "metis_f", "lpa_f"}
+    assert len(PARTITIONERS) == 7
+    with pytest.warns(DeprecationWarning, match="PARTITIONERS"):
+        fn = PARTITIONERS["metis_f"]
+    labels = fn(g, 2, seed=0)
+    np.testing.assert_array_equal(
+        labels, partition_from_spec(g, "metis+f", 2, seed=0).labels)
+
+
+def test_registry_selfcheck_tool():
+    """tools/registry_selfcheck.py --emit: every entry runs on karate club
+    with its default config and prints a stable fingerprint line. (CI runs
+    the tool's full two-process comparison as its own step, so the test
+    only exercises the single-process validation pass.)"""
+    import os
+    import re
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, os.path.join(repo, "tools",
+                                      "registry_selfcheck.py"), "--emit"],
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    lines = out.stdout.strip().splitlines()
+    assert len(lines) == 2 * len(registered_partitioners())
+    assert all(re.fullmatch(r"\S+ [0-9a-f]{16}", ln) for ln in lines), lines
+
+
+def test_shims_raise_keyerror_on_unknown():
+    with pytest.raises(KeyError, match="unknown partitioner"):
+        get_partitioner("nope")
+    with pytest.raises(KeyError, match="available"):
+        PARTITIONERS["nope"]
+    # no DeprecationWarning fires for the failed lookup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with pytest.raises(KeyError):
+            get_partitioner("nope")

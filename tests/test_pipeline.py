@@ -10,9 +10,9 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core import build_partition_batch, build_halo_exchange, \
-    leiden_fusion
-from repro.pipeline import (Pipeline, PipelineConfig,
+from repro.core import PartitionerSpec, build_partition_batch, \
+    build_halo_exchange, leiden_fusion
+from repro.pipeline import (ARTIFACT_VERSION, Pipeline, PipelineConfig,
                             PartitionArtifactStore, get_dataset,
                             graph_fingerprint, make_karate_dataset)
 
@@ -106,8 +106,7 @@ def test_cache_hit_skips_repartitioning(karate, store, monkeypatch):
     def boom(*a, **k):
         raise AssertionError("partitioner re-invoked despite cache hit")
     import repro.pipeline.artifacts as artifacts_mod
-    monkeypatch.setattr(artifacts_mod, "get_partitioner",
-                        lambda name: boom)
+    monkeypatch.setattr(artifacts_mod, "partition_from_spec", boom)
     bundle = store.load_or_compute(g, "leiden_fusion", 2, 0, "inner")
     assert bundle.labels_hit and bundle.batch_hit
 
@@ -148,6 +147,40 @@ def test_halo_augments_cached_batch(karate, store):
                               with_halo=True)
     assert c.batch_hit and c.halo is not None
     np.testing.assert_array_equal(b.halo.send_rows, c.halo.send_rows)
+
+
+def test_artifact_version_is_2():
+    """v2 keys carry the partitioner config fingerprint (API v2)."""
+    assert ARTIFACT_VERSION == 2
+
+
+def test_key_separates_partitioner_config(karate, store):
+    """Regression for the v1 collision: same method, different
+    hyperparameters must land in distinct cache entries."""
+    g = karate.graph
+    a = store.load_or_compute(g, "lpa(balance_cap=1.1)", 2, 0, "inner")
+    b = store.load_or_compute(g, "lpa(balance_cap=2.0)", 2, 0, "inner")
+    assert not a.labels_hit and not b.labels_hit     # no false sharing
+    assert a.labels_path != b.labels_path
+    assert a.batch_path != b.batch_path
+    assert a.fingerprint != b.fingerprint
+    # same spec -> hit on its own entry
+    again = store.load_or_compute(g, "lpa(balance_cap=2.0)", 2, 0, "inner")
+    assert again.labels_hit and again.labels_path == b.labels_path
+    # equivalent spellings of one config share one entry
+    spaced = store.load_or_compute(g, "lpa ( balance_cap = 2.0 )", 2, 0,
+                                   "inner")
+    assert spaced.labels_hit and spaced.labels_path == b.labels_path
+
+
+def test_store_accepts_parsed_specs(karate, store):
+    g = karate.graph
+    spec = PartitionerSpec.parse("metis+f(alpha=0.2)")
+    a = store.load_or_compute(g, spec, 2, 0, "inner")
+    b = store.load_or_compute(g, "metis+f(alpha=0.2)", 2, 0, "inner")
+    assert b.labels_hit and a.labels_path == b.labels_path
+    assert a.spec == b.spec == "metis+f(alpha=0.2)"
+    assert a.fingerprint == spec.fingerprint()
 
 
 def test_corrupt_artifact_is_a_miss(karate, store):
@@ -202,6 +235,42 @@ def test_pipeline_rejects_bad_mode(karate):
         Pipeline(cfg).run(karate)
 
 
+def test_pipeline_rejects_bad_spec(karate):
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        Pipeline(PipelineConfig(dataset="karate",
+                                method="wat")).run(karate)
+    with pytest.raises(ValueError, match="unknown field"):
+        Pipeline(PipelineConfig(dataset="karate",
+                                method="lpa(gamma=1)")).run(karate)
+
+
+def test_pipeline_spec_string_end_to_end(tmp_path, karate):
+    """The acceptance path: a configured +f spec runs end-to-end, the
+    report records the canonical spec + fingerprint, re-running the same
+    spec is a cache hit, and a different alpha is a miss."""
+    def cfg(method):
+        return PipelineConfig(dataset="karate", method=method, k=4,
+                              mode="local", epochs=2, classifier_epochs=5,
+                              hidden_dim=8, embed_dim=8, num_layers=2,
+                              dropout=0.0, cache_dir=str(tmp_path / "c"),
+                              collect_hlo=False)
+
+    rep1 = Pipeline(cfg("lpa +f( alpha = 0.1 )")).run(karate)
+    assert not rep1.partition_cache_hit
+    assert rep1.config["method"] == "lpa+f(alpha=0.1)"   # canonical
+    assert rep1.partition_fingerprint == \
+        PartitionerSpec.parse("lpa+f(alpha=0.1)").fingerprint()
+    assert rep1.partition["total_isolated"] == 0          # +f guarantee
+
+    rep2 = Pipeline(cfg("lpa+f(alpha=0.1)")).run(karate)
+    assert rep2.partition_cache_hit and rep2.batch_cache_hit
+
+    rep3 = Pipeline(cfg("lpa+f(alpha=0.4)")).run(karate)
+    assert not rep3.partition_cache_hit                   # config matters
+    assert rep3.partition_fingerprint != rep1.partition_fingerprint
+    assert "fp=" in rep3.summary()
+
+
 # ---------------------------------------------------------------------------
 # CLI smoke test (subprocess, as users invoke it)
 # ---------------------------------------------------------------------------
@@ -252,3 +321,35 @@ def test_cli_smoke_karate(tmp_path):
     listing = _run_cli(["cache", "--cache-dir", str(tmp_path / "cache")],
                        tmp_path)
     assert "labels-leiden_fusion-k4" in listing
+
+
+def test_cli_accepts_spec_strings(tmp_path):
+    """`run --method "lpa+f(alpha=0.1)"` works from the real CLI and caches
+    under the spec fingerprint."""
+    args = ["run", "--dataset", "karate", "--method", "lpa+f(alpha=0.1)",
+            "--k", "4", "--mode", "local", "--epochs", "2",
+            "--classifier-epochs", "5", "--hidden-dim", "8",
+            "--embed-dim", "8", "--no-hlo",
+            "--cache-dir", str(tmp_path / "cache")]
+    out1 = _run_cli(args, tmp_path)
+    assert "lpa+f(alpha=0.1)" in out1 and "cache MISS" in out1
+    out2 = _run_cli(args, tmp_path)
+    assert "partition cache HIT" in out2
+    listing = _run_cli(["cache", "--cache-dir", str(tmp_path / "cache")],
+                       tmp_path)
+    assert "labels-lpa+f_alpha=0.1-k4" in listing
+
+
+def test_cli_partitioners_lists_registry(tmp_path):
+    out = _run_cli(["partitioners"], tmp_path)
+    for name in ("leiden_fusion", "lpa", "metis", "random", "single"):
+        assert name in out
+    assert "connectivity|balanced" in out       # capability flags
+    assert "resolution: float = 1.0" in out     # config schema + defaults
+    assert "+f" in out and "spec grammar" in out
+
+    js = _run_cli(["partitioners", "--json"], tmp_path)
+    schema = json.loads(js[js.index("{"):])
+    assert schema["lpa"]["fields"]["balance_cap"]["default"] == 1.1
+    assert schema["leiden_fusion"]["capabilities"]["connectivity_guaranteed"]
+    assert schema["+f"]["fields"]["alpha"]["default"] == 0.05

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Partitioner registry self-check (CI gate for Partitioner API v2).
+
+For every registered partitioner:
+
+1. instantiate its default config,
+2. run it on the Zachary karate club (k=2) and validate the labels
+   (shape, dtype, label range) plus any declared capability guarantees
+   (connectivity-guaranteed entries must yield single-component,
+   isolation-free partitions — via a loose-alpha ``+f`` where the bare
+   default would degenerate on a 34-node graph),
+3. emit its config fingerprint (and the fingerprint of its ``+f``
+   variant).
+
+The default mode runs step 1-3 in TWO fresh subprocesses and fails unless
+the emitted fingerprints are byte-identical — the artifact cache keys on
+these fingerprints, so any process-dependent ordering/hashing bug would
+silently split or poison the cache.
+
+    python tools/registry_selfcheck.py          # the two-process check
+    python tools/registry_selfcheck.py --emit   # one process, print lines
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def emit() -> int:
+    import numpy as np
+    from repro.core import (PartitionerSpec, evaluate_partition, karate_club,
+                            registered_partitioners)
+
+    g = karate_club()
+    k = 2
+    failures = []
+    lines = []
+    for name, entry in registered_partitioners().items():
+        entry.config_type()                      # default config instantiates
+        spec = PartitionerSpec.parse(name)
+        res = spec.partition(g, k, seed=0)
+        if res.labels.shape != (g.n,) or res.labels.dtype != np.int64:
+            failures.append(f"{name}: bad labels "
+                            f"({res.labels.shape}, {res.labels.dtype})")
+        if res.labels.min() < 0 or res.labels.max() >= k:
+            failures.append(f"{name}: labels outside [0, {k})")
+        if entry.capabilities.connectivity_guaranteed:
+            rep = evaluate_partition(g, res.labels)
+            if rep.max_components != 1 or rep.total_isolated != 0:
+                failures.append(f"{name}: claims connectivity but gave "
+                                f"components={rep.components_per_part} "
+                                f"isolated={rep.total_isolated}")
+        lines.append(f"{name} {res.fingerprint}")
+        # the +f combinator must compose over every base (loose alpha +
+        # over-partitioning: defaults degenerate on a 34-node graph)
+        fspec = PartitionerSpec.parse(f"{name}+f(alpha=0.5,base_k=8)")
+        frep = evaluate_partition(g, fspec.partition(g, k, seed=0).labels)
+        if frep.max_components != 1 or frep.total_isolated != 0:
+            failures.append(f"{name}+f: components={frep.components_per_part}"
+                            f" isolated={frep.total_isolated}")
+        lines.append(f"{name}+f {fspec.fingerprint()}")
+    for line in lines:
+        print(line)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv) -> int:
+    if "--emit" in argv:
+        return emit()
+    env = dict(os.environ)
+    existing = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = SRC + (os.pathsep + existing if existing else "")
+    runs = []
+    for i in range(2):
+        out = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--emit"],
+            capture_output=True, text=True, env=env, timeout=300)
+        if out.returncode != 0:
+            print(out.stdout)
+            print(out.stderr, file=sys.stderr)
+            print(f"registry self-check FAILED (process {i + 1})")
+            return 1
+        runs.append(out.stdout)
+    if runs[0] != runs[1]:
+        print("registry self-check FAILED: fingerprints differ between "
+              "processes")
+        print("--- run 1 ---\n" + runs[0])
+        print("--- run 2 ---\n" + runs[1])
+        return 1
+    n = len(runs[0].strip().splitlines())
+    print(runs[0], end="")
+    print(f"registry self-check OK ({n} fingerprints stable across "
+          f"2 processes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
