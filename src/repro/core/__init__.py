@@ -1,4 +1,6 @@
 """Core — the paper's contribution: Leiden-Fusion partitioning."""
+from .engine import (CommunityState, QuotientEdges, connected_components,
+                     quotient_edges, split_components)
 from .graph import Graph, NodeDataset, karate_club, make_arxiv_like, make_proteins_like
 from .leiden import leiden
 from .fusion import fuse, leiden_fusion, community_cuts
@@ -19,6 +21,9 @@ from .assemble import (PartitionBatch, HaloExchangeSpec,
                        build_partition_batch, build_halo_exchange)
 
 __all__ = [
+    # the vectorized partitioning engine (DESIGN.md §10)
+    "CommunityState", "QuotientEdges", "connected_components",
+    "quotient_edges", "split_components",
     "Graph", "NodeDataset", "karate_club", "make_arxiv_like",
     "make_proteins_like", "leiden", "fuse", "leiden_fusion", "community_cuts",
     # partitioner API v2

@@ -5,32 +5,52 @@ it into its largest-edge-cut neighbor that stays under ``max_part_size``
 (Algorithm 2 falls back to the *smallest* neighbor when every merge would
 overflow), until exactly ``k`` communities remain.
 
-The inter-community cut weights are maintained incrementally in a dict-of-
-dict sparse structure so each merge is O(deg(c_min) + deg(c_max_cut)) instead
-of a full recount — this is what makes LF *faster* for larger k (Table 3).
+The loop is driven by :class:`repro.core.engine.CommunityState`: the
+inter-community cuts live in per-community *sorted arrays* built once from
+the engine's quotient-graph pass and merged incrementally, so each merge is
+O(deg(c_min) + deg(c_max_cut)) array work instead of a full recount — this
+is what makes LF *faster* for larger k (Table 3). The disconnected-community
+fallback (which cannot trigger for a connected input graph, paper §4.3) pops
+the smallest other live community from the same lazy min-heap that drives
+``c_min`` selection — O(log |C|) amortized, not an O(|C|) scan per event.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import numpy as np
 
+from .engine import CommunityState, quotient_edges
 from .graph import Graph
 from .leiden import leiden
 
 
 def community_cuts(g: Graph, labels: np.ndarray) -> Dict[int, Dict[int, float]]:
-    """cuts[a][b] = total edge weight between communities a and b (a != b)."""
-    src, dst, w = g.arcs()
-    ls, ld = labels[src], labels[dst]
-    keep = ls != ld
+    """cuts[a][b] = total edge weight between communities a and b (a != b).
+
+    Compatibility view over :func:`repro.core.engine.quotient_edges` (the
+    one quotient-graph/cut implementation); Fusion itself consumes the
+    array form via :class:`~repro.core.engine.CommunityState`.
+    """
+    q = quotient_edges(g, labels)
     cuts: Dict[int, Dict[int, float]] = {}
-    for a, b, ww in zip(ls[keep], ld[keep], w[keep]):
-        a, b = int(a), int(b)
-        cuts.setdefault(a, {})
-        cuts[a][b] = cuts[a].get(b, 0.0) + ww  # each arc counted once per dir
+    for a, b, w in zip(q.src.tolist(), q.dst.tolist(), q.weight.tolist()):
+        cuts.setdefault(a, {})[b] = w
     return cuts
+
+
+def _pop_live(heap, state: CommunityState, skip: int = -1) -> int:
+    """Pop the smallest live community (lazy invalidation); ``skip`` is
+    excluded (used by the disconnected fallback, where ``c_min`` itself must
+    not be returned). Popped-but-valid entries are consumed: the caller
+    either merges the result away or re-pushes it."""
+    size = state.size
+    alive = state.alive
+    while True:
+        s, c = heapq.heappop(heap)
+        if c != skip and alive[c] and s == size[c]:
+            return c
 
 
 def fuse(g: Graph, labels: np.ndarray, k: int, max_part_size: float,
@@ -44,71 +64,38 @@ def fuse(g: Graph, labels: np.ndarray, k: int, max_part_size: float,
     num = int(labels.max()) + 1
     if num <= k:
         return labels
-    size = np.zeros(num, dtype=np.float64)
-    if sizes is None:
-        np.add.at(size, labels, 1.0)
-    else:
-        size[:] = sizes
-    cuts = community_cuts(g, labels)
-    alive = np.ones(num, dtype=bool)
+    state = CommunityState(g, labels, sizes=sizes)
+    size = state.size
     # min-heap of (size, comm) with lazy invalidation
-    heap: list[Tuple[float, int]] = [(size[c], c) for c in range(num)]
+    heap = [(size[c], c) for c in range(num)]
     heapq.heapify(heap)
-    # union-find to remap labels at the end
-    parent = np.arange(num, dtype=np.int64)
-
-    def find(x: int) -> int:
-        while parent[x] != x:
-            parent[x] = parent[parent[x]]
-            x = int(parent[x])
-        return x
 
     remaining = num
     while remaining > k:
         # --- c_min: smallest live community -------------------------------
-        while True:
-            s, c_min = heapq.heappop(heap)
-            if alive[c_min] and s == size[c_min]:
-                break
-        nbrs = cuts.get(c_min, {})
-        live_nbrs = [(c, w) for c, w in nbrs.items() if alive[c]]
-        if not live_nbrs:
-            # disconnected community (cannot happen for a connected input
-            # graph, see paper §4.3) — merge with the smallest live community
-            others = [c for c in range(num) if alive[c] and c != c_min]
-            target = min(others, key=lambda c: size[c])
-            w = 0.0
-            live_nbrs = [(target, w)]
-        # --- Algorithm 2: LargestEdgeCutNeighbor ---------------------------
-        fitting = [(c, w) for c, w in live_nbrs
-                   if size[c] + size[c_min] < max_part_size]
-        if fitting:
-            # arg max cut; ties broken by smaller size for balance
-            c_max_cut = max(fitting, key=lambda cw: (cw[1], -size[cw[0]]))[0]
+        c_min = _pop_live(heap, state)
+        nbrs, cut_w = state.neighbors(c_min)
+        if nbrs.size:
+            # --- Algorithm 2: LargestEdgeCutNeighbor -----------------------
+            fits = size[nbrs] + size[c_min] < max_part_size
+            if fits.any():
+                fid, fw = nbrs[fits], cut_w[fits]
+                # arg max cut; ties broken by smaller size for balance,
+                # then smaller id for determinism
+                target = int(fid[np.lexsort((fid, size[fid], -fw))[0]])
+            else:
+                # every merge would overflow: take the smallest neighbor
+                target = int(nbrs[np.lexsort((nbrs, size[nbrs]))[0]])
         else:
-            c_max_cut = min(live_nbrs, key=lambda cw: size[cw[0]])[0]
-        # --- merge c_min into c_max_cut ------------------------------------
-        a, b = int(c_max_cut), int(c_min)
-        parent[b] = a
-        alive[b] = False
-        size[a] += size[b]
-        # fold b's cut lists into a's
-        cuts_a = cuts.setdefault(a, {})
-        for c, w in cuts.pop(b, {}).items():
-            if c == a or not alive[c]:
-                continue
-            cuts_a[c] = cuts_a.get(c, 0.0) + w
-            cuts_c = cuts.setdefault(c, {})
-            cuts_c[a] = cuts_c.get(a, 0.0) + w
-            cuts_c.pop(b, None)
-        cuts_a.pop(b, None)
-        heapq.heappush(heap, (size[a], a))
+            # disconnected community — merge with the smallest other live
+            # community, straight off the heap
+            target = _pop_live(heap, state, skip=c_min)
+        # --- merge c_min into target ---------------------------------------
+        state.merge(c_min, into=target)
+        heapq.heappush(heap, (size[target], target))
         remaining -= 1
 
-    # remap to compact 0..k-1
-    root = np.array([find(int(c)) for c in range(num)], dtype=np.int64)
-    _, compact = np.unique(root, return_inverse=True)
-    return compact[labels]
+    return state.compact_labels()
 
 
 def leiden_fusion(g: Graph, k: int, alpha: float = 0.05, beta: float = 0.5,
@@ -119,6 +106,11 @@ def leiden_fusion(g: Graph, k: int, alpha: float = 0.05, beta: float = 0.5,
     ``gamma`` is the Leiden modularity resolution (higher -> more, smaller
     communities entering the fusion stage). Exposed through the v2 spec
     grammar as ``"leiden_fusion(resolution=...)"``.
+
+    Leiden returns connected communities and Fusion only ever merges a
+    community into a community it shares an edge with, so for a connected
+    input every output partition is one connected component with no
+    isolated nodes (the paper's central guarantee).
     """
     max_part_size = (g.n / k) * (1.0 + alpha)
     labels = leiden(g, max_community_size=beta * max_part_size, seed=seed,

@@ -1,4 +1,11 @@
-"""Partition quality metrics — paper §5.1, equations (5)-(7)."""
+"""Partition quality metrics — paper §5.1, equations (5)-(7).
+
+Fully vectorized on top of :mod:`repro.core.engine`: per-partition node and
+edge counts via ``bincount``, per-partition components via the engine's
+array union-find, halo pairs via ``np.unique`` over ``(part, node)`` keys.
+No Python loop touches nodes or edges, so evaluating a 500k-node partition
+is sub-second.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,6 +13,7 @@ from typing import Dict, List
 
 import numpy as np
 
+from .engine import connected_components
 from .graph import Graph
 
 
@@ -54,33 +62,35 @@ def evaluate_partition(g: Graph, labels: np.ndarray) -> PartitionReport:
     cut_mask = labels[s] != labels[d]
     edge_cut_pct = 100.0 * cut_mask.sum() / max(m, 1)
 
-    # per-partition structure
-    comps, isolated, nodes, edges = [], [], [], []
-    deg = np.zeros(g.n, dtype=np.int64)
+    # per-partition structure — all bincounts over the intra-partition
+    # edge subgraph
     same = ~cut_mask
-    np.add.at(deg, s[same], 1)
-    np.add.at(deg, d[same], 1)
-    for p in range(k):
-        mask = labels == p
-        nodes.append(int(mask.sum()))
-        edges.append(int((same & (labels[s] == p)).sum()))
-        comps.append(g.num_components(mask))
-        isolated.append(int(((deg == 0) & mask).sum()))
+    si, di = s[same], d[same]
+    nodes = np.bincount(labels, minlength=k)
+    edges = np.bincount(labels[si], minlength=k)
+    deg = np.bincount(si, minlength=g.n) + np.bincount(di, minlength=g.n)
+    isolated = np.bincount(labels[deg == 0], minlength=k)
+    # components of the intra-partition subgraph ARE the per-partition
+    # components; one union-find pass, then count components per partition
+    # via each component's representative node
+    comp = connected_components(g.n, si, di)
+    _, rep = np.unique(comp, return_index=True)
+    comps = np.bincount(labels[rep], minlength=k)
 
-    node_balance = max(nodes) / (g.n / k)
-    edge_balance = max(edges) / (max(sum(edges), 1) / k)
+    node_balance = nodes.max() / (g.n / k)
+    edge_balance = edges.max() / (max(int(edges.sum()), 1) / k)
 
     # replication factor with 1-hop halos: each partition stores its own
-    # nodes + boundary neighbors in other partitions
-    halo_pairs = set()
-    for a, b in zip(s[cut_mask], d[cut_mask]):
-        halo_pairs.add((int(labels[a]), int(b)))
-        halo_pairs.add((int(labels[b]), int(a)))
-    rf = (g.n + len(halo_pairs)) / g.n
+    # nodes + boundary neighbors in other partitions — deduped (part, node)
+    # keys over the cut edges
+    cs, cd = s[cut_mask], d[cut_mask]
+    halo_keys = np.unique(np.concatenate([labels[cs] * g.n + cd,
+                                          labels[cd] * g.n + cs]))
+    rf = (g.n + halo_keys.size) / g.n
 
     return PartitionReport(k=k, edge_cut_pct=float(edge_cut_pct),
-                           components_per_part=comps,
-                           isolated_per_part=isolated,
+                           components_per_part=[int(c) for c in comps],
+                           isolated_per_part=[int(i) for i in isolated],
                            node_balance=float(node_balance),
                            edge_balance=float(edge_balance),
                            replication_factor=float(rf))

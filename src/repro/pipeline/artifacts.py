@@ -25,9 +25,11 @@ collided them.
 Filenames embed a human-readable prefix plus the first 16 hex chars of the
 key digest; the digest covers a format-version field, so bumping
 ``ARTIFACT_VERSION`` silently invalidates stale bundles (v2: fingerprint
-keys). Writes are atomic (tmp file + ``os.replace``); loads validate the
-embedded metadata against the requested key and treat any mismatch as a
-miss.
+keys; v3: the vectorized partitioning engine visits nodes in a different
+order than the v2 Python queue, so v2 labels are stale for identical
+fingerprints — they degrade to cache misses, never wrong hits). Writes are
+atomic (tmp file + ``os.replace``); loads validate the embedded metadata
+against the requested key and treat any mismatch as a miss.
 """
 from __future__ import annotations
 
@@ -53,7 +55,7 @@ __all__ = ["ARTIFACT_VERSION", "ArtifactBundle", "PartitionArtifactStore",
 
 log = logging.getLogger("repro.pipeline")
 
-ARTIFACT_VERSION = 2
+ARTIFACT_VERSION = 3
 
 _BATCH_FIELDS = ("node_ids", "node_mask", "owned_mask", "edge_src",
                  "edge_dst", "edge_weight", "in_degree")

@@ -42,6 +42,10 @@ def _build_parser() -> argparse.ArgumentParser:
                      help="karate | arxiv-like | proteins-like")
     run.add_argument("--nodes", type=int, default=None,
                      help="node count override for synthetic datasets")
+    run.add_argument("--dataset-scale", type=float, default=None,
+                     help="node-count multiplier for synthetic datasets "
+                          "(e.g. 12.5 on arxiv-like -> 500k nodes; the "
+                          "vectorized engine partitions it in seconds)")
     run.add_argument("--method", default="leiden_fusion",
                      help="partitioner spec, e.g. leiden_fusion | metis | "
                           "\"lpa+f(alpha=0.1)\" | "
@@ -89,6 +93,8 @@ def _cmd_run(args: argparse.Namespace) -> int:
     dataset_kwargs = {}
     if args.nodes is not None:
         dataset_kwargs["n"] = args.nodes
+    if args.dataset_scale is not None:
+        dataset_kwargs["scale"] = args.dataset_scale
     cfg = PipelineConfig(
         dataset=args.dataset, method=args.method, k=args.k, seed=args.seed,
         scheme=args.scheme, mode=args.mode, model=args.model,

@@ -1,0 +1,292 @@
+"""Tests for the vectorized partitioning engine (repro.core.engine).
+
+Three layers:
+1. primitive equivalence — quotient_edges / connected_components /
+   split_components against brute-force references;
+2. CommunityState invariants — the incrementally-merged adjacency must
+   stay consistent with a from-scratch quotient after any merge sequence;
+3. end-to-end invariants (hypothesis over random connected SBMs) — the
+   paper's guarantees survive the vectorized rewrite, deterministically.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CommunityState, Graph, connected_components,
+                        evaluate_partition, fuse, karate_club, leiden,
+                        leiden_fusion, quotient_edges, split_components)
+from repro.core.fusion import community_cuts
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _bfs_components(g: Graph, mask=None) -> np.ndarray:
+    """The seed implementation's per-node BFS, kept as the reference."""
+    if mask is None:
+        mask = np.ones(g.n, dtype=bool)
+    comp = np.full(g.n, -1, dtype=np.int64)
+    next_id = 0
+    for seed in range(g.n):
+        if not mask[seed] or comp[seed] >= 0:
+            continue
+        comp[seed] = next_id
+        stack = [seed]
+        while stack:
+            v = stack.pop()
+            for u in g.neighbors(v):
+                u = int(u)
+                if mask[u] and comp[u] < 0:
+                    comp[u] = next_id
+                    stack.append(u)
+        next_id += 1
+    return comp
+
+
+def _random_graph(rng: np.random.Generator, n: int, extra: int) -> Graph:
+    """Random tree (guaranteed connected) plus ``extra`` random edges."""
+    parents = [int(rng.integers(0, i)) for i in range(1, n)]
+    src = list(range(1, n)) + [int(x) for x in rng.integers(0, n, extra)]
+    dst = parents + [int(x) for x in rng.integers(0, n, extra)]
+    return Graph.from_edges(n, np.array(src), np.array(dst))
+
+
+@st.composite
+def connected_sbms(draw):
+    """Small connected SBM-ish graphs: planted blocks plus a spanning tree."""
+    n = draw(st.integers(min_value=12, max_value=80))
+    blocks = draw(st.integers(min_value=2, max_value=5))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    block_of = rng.integers(0, blocks, n)
+    # spanning tree for connectivity
+    parents = [int(rng.integers(0, i)) for i in range(1, n)]
+    src = list(range(1, n)); dst = parents
+    # dense-ish intra-block edges, sparse inter-block
+    for b in range(blocks):
+        members = np.where(block_of == b)[0]
+        if members.size >= 2:
+            m_in = 3 * members.size
+            src += [int(x) for x in members[rng.integers(0, members.size, m_in)]]
+            dst += [int(x) for x in members[rng.integers(0, members.size, m_in)]]
+    extra = draw(st.integers(min_value=0, max_value=n))
+    src += [int(x) for x in rng.integers(0, n, extra)]
+    dst += [int(x) for x in rng.integers(0, n, extra)]
+    return Graph.from_edges(n, np.array(src), np.array(dst))
+
+
+# ---------------------------------------------------------------------------
+# quotient_edges — THE quotient/cut builder
+# ---------------------------------------------------------------------------
+def test_quotient_edges_matches_brute_force():
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    q = quotient_edges(g, labels)
+    src, dst, w = g.arcs()
+    ls, ld = labels[src], labels[dst]
+    for a, b, qw in zip(q.src, q.dst, q.weight):
+        assert a != b
+        assert qw == pytest.approx(w[(ls == a) & (ld == b)].sum())
+    # intra: per-community internal undirected weight
+    for c in range(q.k):
+        intra = labels[src] == labels[dst]
+        expect = w[intra & (ls == c)].sum() / 2.0
+        assert q.intra[c] == pytest.approx(expect)
+    assert q.node_weight.sum() == pytest.approx(g.node_weight.sum())
+
+
+def test_quotient_edges_symmetric_and_sorted():
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    q = quotient_edges(g, labels)
+    # sorted lexicographically by (src, dst)
+    key = q.src * q.k + q.dst
+    assert (np.diff(key) > 0).all()
+    # every arc has its reciprocal with equal weight
+    fwd = {(int(a), int(b)): float(x)
+           for a, b, x in zip(q.src, q.dst, q.weight)}
+    for (a, b), x in fwd.items():
+        assert fwd[(b, a)] == pytest.approx(x)
+
+
+def test_community_cuts_is_a_quotient_view():
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    q = quotient_edges(g, labels)
+    cuts = community_cuts(g, labels)
+    assert sum(len(v) for v in cuts.values()) == q.src.size
+    for a, b, w in zip(q.src, q.dst, q.weight):
+        assert cuts[int(a)][int(b)] == pytest.approx(float(w))
+
+
+def test_aggregate_routes_through_quotient():
+    """Graph.aggregate is a thin view of quotient_edges: CSR == arc arrays."""
+    g = karate_club()
+    labels = leiden(g, seed=0)
+    agg = g.aggregate(labels)
+    q = quotient_edges(g, labels)
+    np.testing.assert_array_equal(agg.indptr, q.indptr())
+    np.testing.assert_array_equal(agg.indices, q.dst.astype(np.int32))
+    np.testing.assert_allclose(agg.edge_weight, q.weight)
+    np.testing.assert_allclose(agg.self_weight, q.intra)
+    np.testing.assert_allclose(agg.node_weight, q.node_weight)
+    assert agg.m == pytest.approx(g.m)
+
+
+# ---------------------------------------------------------------------------
+# connected_components — array union-find vs. the BFS reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_union_find_matches_bfs_numbering(seed):
+    rng = np.random.default_rng(seed)
+    n = 60
+    # a deliberately fragmented graph: a few small trees
+    src, dst = [], []
+    for lo in range(0, n - 10, 15):
+        hi = lo + int(rng.integers(5, 12))
+        for v in range(lo + 1, min(hi, n)):
+            src.append(v); dst.append(lo + int(rng.integers(0, v - lo)))
+    g = Graph.from_edges(n, np.array(src), np.array(dst))
+    np.testing.assert_array_equal(g.connected_components(),
+                                  _bfs_components(g))
+    mask = rng.random(n) < 0.7
+    np.testing.assert_array_equal(g.connected_components(mask),
+                                  _bfs_components(g, mask))
+
+
+def test_union_find_isolated_nodes_and_empty_mask():
+    g = Graph.from_edges(5, [0, 1], [1, 2], None)
+    comp = connected_components(g.n, *g.arcs()[:2])
+    assert comp.tolist() == [0, 0, 0, 1, 2]
+    none = g.connected_components(np.zeros(5, dtype=bool))
+    assert (none == -1).all()
+
+
+def test_split_components_vectorized():
+    g = Graph.from_edges(6, [0, 2, 4], [1, 3, 5], None)
+    labels = np.array([0, 0, 0, 0, 1, 1])
+    out = split_components(g, labels)
+    assert len(np.unique(out)) == 3
+    # compact ids, every community connected
+    assert set(np.unique(out)) == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# CommunityState — incrementally merged adjacency stays exact
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [3, 7])
+def test_community_state_matches_fresh_quotient_after_merges(seed):
+    rng = np.random.default_rng(seed)
+    g = _random_graph(rng, 50, 120)
+    labels = leiden(g, seed=0)
+    state = CommunityState(g, labels)
+    num = state.num
+    for _ in range(num - 2):
+        alive = np.flatnonzero(state.alive)
+        a, b = rng.choice(alive, size=2, replace=False)
+        state.merge(int(b), into=int(a))
+        # the state's view of a's neighborhood must equal a from-scratch
+        # quotient of the merged labelling
+        merged = state.compact_labels()
+        q = quotient_edges(g, merged)
+        root = state.roots()
+        _, compact = np.unique(root, return_inverse=True)
+        ca = compact[int(a)]
+        nbrs, ws = state.neighbors(int(a))
+        sel = q.src == ca
+        np.testing.assert_array_equal(np.sort(compact[nbrs]), q.dst[sel])
+        order = np.argsort(compact[nbrs])
+        np.testing.assert_allclose(ws[order], q.weight[sel])
+    # sizes survive arbitrary merge sequences
+    merged = state.compact_labels()
+    sizes = np.bincount(merged)
+    live = np.flatnonzero(state.alive)
+    root = state.roots()
+    _, compact = np.unique(root, return_inverse=True)
+    np.testing.assert_allclose(np.sort(state.size[live]),
+                               np.sort(sizes.astype(float)))
+
+
+# ---------------------------------------------------------------------------
+# fuse — disconnected fallback pops the heap (satellite regression)
+# ---------------------------------------------------------------------------
+def test_fuse_disconnected_input_uses_heap_fallback():
+    """A community with no neighbors (disconnected input) must merge with
+    the smallest other live community and still reach exactly k."""
+    # two disjoint paths + two isolated nodes
+    g = Graph.from_edges(8, [0, 1, 3, 4], [1, 2, 4, 5], None)
+    labels = np.arange(8, dtype=np.int64)          # singletons
+    out = fuse(g, labels, 2, max_part_size=8.0)
+    assert int(out.max()) + 1 == 2
+    # deterministic across calls
+    np.testing.assert_array_equal(out, fuse(g, labels, 2, max_part_size=8.0))
+
+
+def test_fuse_no_inter_community_arcs():
+    """Labelling with ZERO inter-community arcs (labels == components of a
+    disconnected graph): every merge goes through the heap fallback and the
+    empty-quotient bincount must not crash CommunityState."""
+    g = Graph.from_edges(6, [0, 2, 4], [1, 3, 5], None)
+    labels = np.array([0, 0, 1, 1, 2, 2], dtype=np.int64)
+    out = fuse(g, labels, 2, max_part_size=10.0)
+    assert int(out.max()) + 1 == 2
+
+
+def test_quotient_edges_rejects_bad_self_weight():
+    g = karate_club()
+    labels = np.zeros(g.n, dtype=np.int64)
+    with pytest.raises(ValueError):
+        quotient_edges(g, labels, self_weight=np.zeros(3))
+
+
+def test_fuse_disconnected_many_components_terminates_fast():
+    """O(|C| log |C|) fallback: hundreds of isolated nodes fuse quickly and
+    exactly (the old O(|C|^2) scan made this quadratic)."""
+    n = 400
+    # edges only among the first 100 nodes; 300 isolated nodes
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 100, 300)
+    dst = rng.integers(0, 100, 300)
+    keep = src != dst
+    g = Graph.from_edges(n, src[keep], dst[keep], None)
+    out = fuse(g, np.arange(n, dtype=np.int64), 4, max_part_size=n)
+    assert int(out.max()) + 1 == 4
+    assert out.shape == (n,)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end invariants over random connected SBMs (hypothesis)
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(g=connected_sbms(), k=st.integers(min_value=2, max_value=4),
+       seed=st.integers(min_value=0, max_value=3))
+def test_property_engine_leiden_fusion_invariants(g, k, seed):
+    """The satellite invariants: exactly k partitions, each one connected
+    component, zero isolated nodes, sizes within the (n/k)(1+alpha) cap
+    modulo the documented overflow case (no fitting neighbor -> Algorithm 2
+    merges into the smallest neighbor anyway), and per-seed determinism."""
+    alpha = 1.0
+    labels = leiden_fusion(g, k, alpha=alpha, seed=seed)
+    assert int(labels.max()) + 1 == k
+    rep = evaluate_partition(g, labels)
+    assert rep.components_per_part == [1] * k
+    assert rep.total_isolated == 0
+    cap = (g.n / k) * (1.0 + alpha)
+    sizes = np.bincount(labels, minlength=k)
+    overflow = sizes[sizes > cap]
+    # documented overflow: at most one partition may exceed the cap, and
+    # only because every fitting merge was exhausted
+    assert overflow.size <= 1, (sizes, cap)
+    # determinism: same seed, same labels, bit for bit
+    np.testing.assert_array_equal(labels,
+                                  leiden_fusion(g, k, alpha=alpha, seed=seed))
+
+
+@settings(max_examples=15, deadline=None)
+@given(g=connected_sbms())
+def test_property_leiden_communities_connected(g):
+    """The vectorized local move + refinement still guarantees connected
+    communities (enforced by the engine's component split)."""
+    labels = leiden(g, seed=0)
+    for c in range(int(labels.max()) + 1):
+        assert g.num_components(labels == c) == 1

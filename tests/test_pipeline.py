@@ -149,9 +149,32 @@ def test_halo_augments_cached_batch(karate, store):
     np.testing.assert_array_equal(b.halo.send_rows, c.halo.send_rows)
 
 
-def test_artifact_version_is_2():
-    """v2 keys carry the partitioner config fingerprint (API v2)."""
-    assert ARTIFACT_VERSION == 2
+def test_artifact_version_is_3():
+    """v3 invalidates v2 labels: the vectorized partitioning engine visits
+    nodes in a different order than the v2 Python queue, so cached labels
+    from v2 are stale for identical fingerprints."""
+    assert ARTIFACT_VERSION == 3
+
+
+def test_v2_bundles_degrade_to_misses(karate, store):
+    """A bundle written under the v2 key must be a MISS for v3 (recompute),
+    never a wrong hit — even when graph/spec/k/seed all match."""
+    import repro.pipeline.artifacts as artifacts_mod
+    g = karate.graph
+    spec = PartitionerSpec.parse("leiden_fusion")
+    ghash = graph_fingerprint(g)
+    # forge the exact bundle a v2 store would have written
+    v2_meta = store._labels_meta(ghash, spec, 2, 0)
+    v2_meta["version"] = 2
+    v2_path = store._path(v2_meta, spec)
+    bogus = np.zeros(g.n, dtype=np.int64)       # stale labels, must not leak
+    store._atomic_savez(v2_path, labels=bogus,
+                        meta_json=np.asarray(json.dumps(v2_meta)))
+    labels, hit, path, _ = store.load_or_partition(g, spec, 2, 0)
+    assert not hit                              # degraded to a miss
+    assert path != v2_path                      # v3 keys land elsewhere
+    assert os.path.exists(v2_path)              # v2 bundle left untouched
+    assert int(labels.max()) + 1 == 2           # freshly recomputed
 
 
 def test_key_separates_partitioner_config(karate, store):
