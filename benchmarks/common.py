@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+import json
 import os
 import sys
 import time
@@ -20,6 +21,27 @@ def partition_store():
     (method, k, seed) exactly once)."""
     from repro.pipeline import PartitionArtifactStore
     return PartitionArtifactStore(PARTITION_CACHE)
+
+
+def append_bench_json(path: str, rows: List[Dict]) -> None:
+    """Append rows (stamped with one shared timestamp) to a JSON
+    perf-trajectory file — the BENCH_*.json pattern shared by
+    partition_time and training_time. The rewrite is atomic (tmp file +
+    ``os.replace``) so an interrupted run cannot truncate the history."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (OSError, ValueError):
+            history = []
+    stamp = time.time()
+    history.extend({**r, "ts": stamp} for r in rows)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=2)
+    os.replace(tmp, path)
 
 
 def emit(table: str, rows: List[Dict], keys: List[str] | None = None) -> None:

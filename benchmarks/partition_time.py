@@ -21,28 +21,12 @@ timestamp), so the perf trajectory accumulates across runs.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
-from .common import ARTIFACTS, arxiv_like, emit
+from .common import ARTIFACTS, append_bench_json, arxiv_like, emit
 
 BENCH_JSON = os.path.join(ARTIFACTS, "BENCH_partition_time.json")
-
-
-def _append_bench_json(rows) -> None:
-    os.makedirs(ARTIFACTS, exist_ok=True)
-    history = []
-    if os.path.exists(BENCH_JSON):
-        try:
-            with open(BENCH_JSON) as f:
-                history = json.load(f)
-        except (OSError, ValueError):
-            history = []
-    stamp = time.time()
-    history.extend({**r, "ts": stamp} for r in rows)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(history, f, indent=2)
 
 
 def run(fast: bool = True, scale: float = 1.0, all_methods: bool = False,
@@ -80,7 +64,7 @@ def run(fast: bool = True, scale: float = 1.0, all_methods: bool = False,
         rows.append({"method": "fusion_only", "k": k, "n": n,
                      "time_s": round(time.time() - t0, 3)})
     emit("table3_partition_time", rows)
-    _append_bench_json(rows)
+    append_bench_json(BENCH_JSON, rows)
     print(f"# leiden preprocessing: {leiden_s:.1f}s (paper: 11.5s on Arxiv)")
     if smoke:
         _smoke_check(g, ks[0], smoke_labels)

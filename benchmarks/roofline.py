@@ -1,14 +1,61 @@
 """§Roofline: aggregate the dry-run artifacts into the per-(arch x shape)
-roofline table (single-pod baseline) + the multi-pod compile matrix."""
+roofline table (single-pod baseline) + the multi-pod compile matrix, plus
+the GNN train-step cost table (jnp vs Pallas-kernel aggregation).
+
+The GNN section lowers+compiles the local train step both ways and reads
+XLA ``cost_analysis`` FLOPs / bytes — the same no-analytic-estimates rule
+as the LM roofline (DESIGN.md §6). It exercises the differentiable kernel
+path end-to-end: the compiled step includes the custom-VJP transpose
+aggregation and the edge-dot kernel (DESIGN.md §11)."""
 from __future__ import annotations
 
 import glob
 import json
 import os
 
-from .common import ARTIFACTS, emit
+from .common import ARTIFACTS, arxiv_like, emit
 
 DRYRUN_DIR = os.path.join(ARTIFACTS, "dryrun")
+
+
+def gnn_train_step_costs():
+    """Compiled-HLO cost of one local train step, jnp vs kernel path."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import build_partition_batch, partition_from_spec
+    from repro.gnn import (GNNConfig, gather_partition_tensors,
+                           init_partition_models, make_local_train_step)
+    from repro.gnn.train import _tensors_dict
+    from repro.launch.hlo_analysis import normalize_cost_analysis
+    from repro.optim import adamw_init
+
+    ds = arxiv_like(n=1200)
+    labels = partition_from_spec(ds.graph, "leiden_fusion", 4, seed=0).labels
+    batch = build_partition_batch(ds.graph, labels, scheme="repli")
+    pt = gather_partition_tensors(ds, batch)
+    tensors = {n: jnp.asarray(v) for n, v in _tensors_dict(pt).items()}
+    rows = []
+    for use_kernel in (False, True):
+        cfg = GNNConfig(kind="gcn", feature_dim=int(ds.features.shape[1]),
+                        hidden_dim=128, embed_dim=128, num_layers=3,
+                        dropout=0.0, use_kernel=use_kernel)
+        params = init_partition_models(jax.random.PRNGKey(0), cfg,
+                                       ds.num_classes, batch.k)
+        opt = jax.vmap(adamw_init)(params)
+        step = jax.jit(make_local_train_step(cfg, False, lr=5e-3))
+        keys = jax.random.split(jax.random.PRNGKey(1), batch.k)
+        compiled = step.lower(params, opt, tensors, keys).compile()
+        ca = normalize_cost_analysis(compiled.cost_analysis())
+        flops = float(ca.get("flops", 0.0))
+        byts = float(ca.get("bytes accessed", 0.0))
+        rows.append({
+            "aggregation": "kernel" if use_kernel else "jnp",
+            "k": batch.k, "n_pad": batch.n_pad, "e_pad": batch.e_pad,
+            "flops": flops, "bytes_accessed": byts,
+            "arith_intensity": round(flops / byts, 3) if byts else None,
+        })
+    emit("gnn_train_step_roofline", rows)
+    return rows
 
 
 def load_records(mesh: str | None = None, mode: str | None = None):
@@ -25,6 +72,7 @@ def load_records(mesh: str | None = None, mode: str | None = None):
 
 
 def run(fast: bool = True):
+    gnn_train_step_costs()
     rows = []
     for r in load_records(mesh="pod16x16"):
         if "workload" in r:

@@ -1,46 +1,97 @@
-"""Paper Fig 7: training time vs number of partitions (Inner vs Repli).
+"""Paper Fig 7: training time vs number of partitions (Inner vs Repli),
+plus the jnp-vs-Pallas-kernel aggregation trajectory.
 
 The paper's claim: because LF training is communication-free, the wall time
 of the slowest partition drops steeply with k (vs synchronized frameworks
 where communication keeps it flat). Runs through ``repro.pipeline`` (shared
 partition cache, classifier stage skipped) and reads the train-stage timing
-from the PipelineReport."""
+from the PipelineReport.
+
+Since the aggregation kernel grew a custom VJP (DESIGN.md §11),
+``use_kernel=True`` is a real training path, so every grid also times it
+against the jnp segment-sum path. On CPU the kernel executes in interpret
+mode — those numbers anchor the *trajectory* (and catch pathological
+regressions), not TPU performance; the kernel rows therefore run at the
+smallest k only in the full grid, and on a reduced graph in ``--smoke``.
+
+    PYTHONPATH=src python -m benchmarks.training_time           # fast grid
+    PYTHONPATH=src python -m benchmarks.training_time --full
+    PYTHONPATH=src python -m benchmarks.training_time --smoke   # CI gate
+
+Besides the CSV block, every run appends its rows to
+``benchmarks/artifacts/BENCH_training_time.json`` (k, scheme, kernel,
+epochs, wall seconds, timestamp), accumulating the training-perf trajectory
+across commits the same way ``BENCH_partition_time.json`` does for
+partitioning.
+"""
 from __future__ import annotations
 
-from .common import arxiv_like, emit, partition_store
+import argparse
+import os
+
+from .common import (ARTIFACTS, append_bench_json, arxiv_like, emit,
+                     partition_store)
+
+BENCH_JSON = os.path.join(ARTIFACTS, "BENCH_training_time.json")
 
 
-def run(fast: bool = True):
+def _time_one(ds, k: int, scheme: str, use_kernel: bool, epochs: int):
     from repro.pipeline import Pipeline, PipelineConfig
-    ds = arxiv_like()
-    ks = (2, 8, 16) if fast else (2, 4, 8, 16)
-    epochs = 15
+    cfg = PipelineConfig(
+        method="leiden_fusion", k=k, seed=0, scheme=scheme,
+        mode="local", model="gcn", use_kernel=use_kernel,
+        hidden_dim=128, embed_dim=128,
+        num_layers=3, dropout=0.0, epochs=epochs, lr=5e-3,
+        classifier_epochs=0,          # timing only
+        collect_hlo=False,
+        # unsharded: the per_machine_s = wall/k math below assumes
+        # the k partitions train sequentially on ONE device
+        shard_data_axis=False)
+    report = Pipeline(cfg, store=partition_store()).run(ds)
+    total = report.timings["train"]
+    return {"k": k, "scheme": scheme,
+            "kernel": use_kernel, "epochs": epochs,
+            "wall_s": round(total, 2),
+            # on k real machines each trains ONLY its own subgraph with
+            # zero communication (proven by the zero-collective HLO), so
+            # per-machine time is the sequential wall divided by k:
+            "per_machine_s": round(total / k, 2),
+            "n_pad": report.shapes["n_pad"],
+            "e_pad": report.shapes["e_pad"]}
+
+
+def run(fast: bool = True, smoke: bool = False):
     rows = []
-    for k in ks:
+    if smoke:
+        # CI training-perf gate: reduced graph, both aggregation paths
+        ds = arxiv_like(n=1200)
+        for use_kernel in (False, True):
+            rows.append(_time_one(ds, k=4, scheme="repli",
+                                  use_kernel=use_kernel, epochs=5))
+    else:
+        ds = arxiv_like()
+        ks = (2, 8, 16) if fast else (2, 4, 8, 16)
+        epochs = 15
+        for k in ks:
+            for scheme in ("inner", "repli"):
+                rows.append(_time_one(ds, k, scheme, False, epochs))
+        # interpret-mode kernel anchor at the smallest k per scheme
         for scheme in ("inner", "repli"):
-            cfg = PipelineConfig(
-                method="leiden_fusion", k=k, seed=0, scheme=scheme,
-                mode="local", model="gcn", hidden_dim=128, embed_dim=128,
-                num_layers=3, dropout=0.0, epochs=epochs, lr=5e-3,
-                classifier_epochs=0,          # timing only
-                collect_hlo=False,
-                # unsharded: the per_machine_s = wall/k math below assumes
-                # the k partitions train sequentially on ONE device
-                shard_data_axis=False)
-            report = Pipeline(cfg, store=partition_store()).run(ds)
-            total = report.timings["train"]
-            rows.append({"k": k, "scheme": scheme, "epochs": epochs,
-                         "wall_s": round(total, 2),
-                         # on k real machines each trains ONLY its own
-                         # subgraph with zero communication (proven by the
-                         # zero-collective HLO), so per-machine time is the
-                         # sequential wall divided by k:
-                         "per_machine_s": round(total / k, 2),
-                         "n_pad": report.shapes["n_pad"],
-                         "e_pad": report.shapes["e_pad"]})
+            rows.append(_time_one(ds, min(ks), scheme, True, epochs))
     emit("fig7_training_time", rows)
+    append_bench_json(BENCH_JSON, rows)
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized k grid")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: reduced graph, jnp vs kernel rows only")
+    args = ap.parse_args()
+    run(fast=not args.full, smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run(fast=False)
+    main()

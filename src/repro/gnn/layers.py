@@ -19,15 +19,19 @@ def aggregate_mean(h: jnp.ndarray, edge_src: jnp.ndarray,
                    ) -> jnp.ndarray:
     """Weighted mean over in-neighbors.  h: [N, F] -> [N, F].
 
-    Padding arcs carry weight 0 and park at row N-1, so they are no-ops.
+    Padding arcs carry weight 0 and may point at any in-range row (the
+    single contract — see :mod:`repro.kernels.ops`): the zero weight is
+    what makes them no-ops on both paths. Both paths are differentiable
+    w.r.t. ``h`` and ``edge_weight``; the kernel path fuses the degree
+    normalization into the Pallas epilogue, so it is one kernel call.
     """
     if use_kernel:
         from repro.kernels.ops import csr_aggregate
-        summed = csr_aggregate(h, edge_src, edge_dst, edge_weight,
-                               num_nodes=h.shape[0])
-    else:
-        msgs = h[edge_src] * edge_weight[:, None]
-        summed = jax.ops.segment_sum(msgs, edge_dst, num_segments=h.shape[0])
+        inv = 1.0 / jnp.maximum(in_degree, 1.0)
+        return csr_aggregate(h, edge_src, edge_dst, edge_weight,
+                             num_nodes=h.shape[0], inv_scale=inv)
+    msgs = h[edge_src] * edge_weight[:, None]
+    summed = jax.ops.segment_sum(msgs, edge_dst, num_segments=h.shape[0])
     return summed / jnp.maximum(in_degree[:, None], 1.0)
 
 

@@ -205,7 +205,13 @@ def make_sync_forward(cfg: GNNConfig, halo: HaloExchangeSpec, axis: str = "data"
     """Forward with halo refresh between layers, for use inside shard_map.
 
     Works on a single partition per device (k == mesh data size). The halo
-    exchange is an all_gather of per-destination send buffers."""
+    exchange is an all_gather of per-destination send buffers.
+
+    ``dropout_key`` mirrors :func:`repro.gnn.model.gnn_forward` exactly
+    (dropout after every non-final layer at rate ``cfg.dropout``), so the
+    sync baseline consumes the training config identically to local mode —
+    earlier revisions silently trained the baseline without dropout, an
+    unfair comparison in the paper's favor. Pass ``None`` for inference."""
     send_rows = jnp.asarray(halo.send_rows)   # [k, k, H]
     recv_rows = jnp.asarray(halo.recv_rows)   # [k, k, H]
 
@@ -227,15 +233,20 @@ def make_sync_forward(cfg: GNNConfig, halo: HaloExchangeSpec, axis: str = "data"
     from .layers import gcn_layer, sage_layer
     layer_fn = gcn_layer if cfg.kind == "gcn" else sage_layer
 
-    def forward(params, t, my_idx):
+    def forward(params, t, my_idx, dropout_key=None):
         h = t["features"] * t["node_mask"][:, None]
         n_layers = len(params["body"]["layers"])
         for i, lp in enumerate(params["body"]["layers"]):
+            last = i == n_layers - 1
             h = refresh(h, my_idx)        # fetch fresh halo activations
             h = layer_fn(lp, h, t["edge_src"], t["edge_dst"],
                          t["edge_weight"], t["in_degree"],
-                         activate=i < n_layers - 1)
+                         activate=not last, use_kernel=cfg.use_kernel)
             h = h * t["node_mask"][:, None]
+            if dropout_key is not None and cfg.dropout > 0 and not last:
+                dropout_key, sub = jax.random.split(dropout_key)
+                keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h.shape)
+                h = jnp.where(keep, h / (1 - cfg.dropout), 0.0)
         logits = h @ params["head"]["w"] + params["head"]["b"]
         return h, logits
     return forward
@@ -247,30 +258,34 @@ def make_sync_train_step(cfg: GNNConfig, halo: HaloExchangeSpec,
     from jax.experimental.shard_map import shard_map
     forward = make_sync_forward(cfg, halo)
 
-    def loss_fn(params, t, my_idx):
-        _, logits = forward(params, t, my_idx)
+    def loss_fn(params, t, my_idx, dropout_key):
+        _, logits = forward(params, t, my_idx, dropout_key)
         if multilabel:
             loss = sigmoid_bce(logits, t["labels"], t["train_mask"])
         else:
             loss = softmax_xent(logits, t["labels"], t["train_mask"])
         return loss
 
-    def local_step(params, opt, t):
+    def local_step(params, opt, t, keys):
         # leading axis is the local shard of k: size 1 per device
         params1 = jax.tree.map(lambda x: x[0], params)
         opt1 = jax.tree.map(lambda x: x[0], opt)
         t1 = jax.tree.map(lambda x: x[0], t)
         my_idx = jax.lax.axis_index("data")
-        loss, grads = jax.value_and_grad(loss_fn)(params1, t1, my_idx)
+        loss, grads = jax.value_and_grad(loss_fn)(params1, t1, my_idx,
+                                                  keys[0])
         new_p, new_o = adamw_update(grads, opt1, params1, lr)
         expand = lambda x: x[None]
         return (jax.tree.map(expand, new_p), jax.tree.map(expand, new_o),
                 loss[None])
 
     pspec = P("data")
+    # check_rep=False: pallas_call (the use_kernel aggregation path) has no
+    # shard_map replication rule; all inputs/outputs are explicitly sharded
+    # over `data`, so the check is vacuous here anyway
     step = shard_map(local_step, mesh=mesh,
-                     in_specs=(pspec, pspec, pspec),
-                     out_specs=(pspec, pspec, pspec))
+                     in_specs=(pspec, pspec, pspec, pspec),
+                     out_specs=(pspec, pspec, pspec), check_rep=False)
     return jax.jit(step)
 
 
@@ -302,11 +317,13 @@ def train_sync(ds: NodeDataset, batch: PartitionBatch,
 
     step = make_sync_train_step(cfg, halo, ds.multilabel, mesh, lr)
     if hlo_out is not None:
-        compiled = step.lower(params, opt, tensors).compile()
+        keys0 = jax.random.split(jax.random.fold_in(key, 0), k)
+        compiled = step.lower(params, opt, tensors, keys0).compile()
         hlo_out["hlo"] = compiled.as_text()
         step = compiled
-    for _ in range(epochs):
-        params, opt, loss = step(params, opt, tensors)
+    for e in range(epochs):
+        keys = jax.random.split(jax.random.fold_in(key, e), k)
+        params, opt, loss = step(params, opt, tensors, keys)
 
     forward = make_sync_forward(cfg, halo)
 
@@ -318,7 +335,8 @@ def train_sync(ds: NodeDataset, batch: PartitionBatch,
 
     pspec = P("data")
     emb = jax.jit(shard_map(eval_one, mesh=mesh, in_specs=(pspec, pspec),
-                            out_specs=pspec))(params, tensors)
+                            out_specs=pspec,
+                            check_rep=False))(params, tensors)
     return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
                                    cfg.embed_dim)
 

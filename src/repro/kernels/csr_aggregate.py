@@ -1,84 +1,221 @@
-"""Pallas TPU kernel: weighted neighbor aggregation (edge-list SpMM).
+"""Pallas TPU kernel: weighted neighbor aggregation (edge-list SpMM),
+node-tiled and differentiable.
 
-The GNN hot-spot: ``out[d] += w[e] * h[src[e]]`` over a destination-sorted
+The GNN hot-spot: ``out[d] += w[e] * h[src[e]]`` over a weight-0-padded
 arc list. GPU implementations use shared-memory atomics; TPU has no scatter
 hardware, so we ADAPT (see DESIGN.md §3): the scatter becomes a **one-hot
 matmul** that feeds the MXU —
 
-    for each edge block E_b and feature tile F_t:
-        G   = h[src[E_b], F_t]                      # gather   [EB, FT]
-        S   = onehot(dst[E_b]) * w[E_b]             # scatter  [N,  EB]
-        out[:, F_t] += S @ G                        # MXU      [N,  FT]
+    for each node tile N_t, feature tile F_t, edge block E_b:
+        G   = h[src[E_b], F_t]                        # gather   [EB, FT]
+        S   = onehot(dst[E_b] - N_t.start) * w[E_b]   # scatter  [NT, EB]
+        out[N_t, F_t] += S @ G                        # MXU      [NT, FT]
+    after the last edge block:
+        out[N_t, F_t] *= inv_scale[N_t, None]         # fused epilogue
 
-Blocking: the grid is (feature tiles × edge blocks); the node dimension
-stays resident in VMEM (the paper's partitions are small by construction —
-that is the point of partitioning — so N_pad ≤ ~8k keeps the working set
-(N·FT + N·EB + EB·FT) · 4B well under the ~16 MB VMEM budget:
-N=8192, FT=128, EB=256 → 4 + 8 + 0.1 ≈ 12 MB).
+Blocking: the grid is (node tiles × feature tiles × edge blocks). Earlier
+revisions kept the whole node dimension resident, which capped partitions at
+~8k padded nodes; the node dimension is now tiled (``NODE_TILE`` rows of the
+one-hot scatter matrix per step, rows outside the tile masked to zero), so
+the VMEM working set per step is
 
-Accumulation is f32; the output block index is independent of the edge-block
-grid dimension, so Pallas keeps it resident and we accumulate across edge
-blocks (init at block 0).
+    (N·FT + NT·EB + NT·FT + EB·FT) · 4 B
+
+where only the gather operand ``h`` (one [N, FT] feature column) still
+scales with N. With NT=512, FT=128, EB=256 and N=25 600 (PR 3's
+``--dataset-scale`` partitions: 100k nodes / k=4, plus halo and padding)
+that is 13.1 + 0.5 + 0.25 + 0.13 ≈ 14 MB — inside the ~16 MB VMEM budget;
+the old layout needed N·EB = 25 MB for the scatter matrix alone. The output
+block index is independent of the edge-block grid dimension, so Pallas keeps
+it resident and we accumulate across edge blocks (init at block 0, scale
+epilogue at the last block). Accumulation is f32. Beyond N ≈ 28k padded
+nodes the gather operand itself would have to be streamed from HBM; the
+paper's partitioning keeps partitions far smaller (k scales with the graph).
+
+Differentiation (DESIGN.md §11): ``csr_aggregate_pallas`` carries a
+``jax.custom_vjp``. With A the [N, N] weighted adjacency the forward is
+``out = diag(inv_scale) · A · h``, so
+
+* the h-cotangent is ``Aᵀ · diag(inv_scale) · g`` — the *same* kernel run
+  over the reversed arc list ``(dst, src)`` with weights
+  ``w[e]·inv_scale[dst[e]]`` and no epilogue, re-sorted by the new
+  destination (= original source) via a precomputed permutation;
+* the edge-weight cotangent is the per-edge row dot
+  ``dw[e] = inv_scale[dst[e]] · <g[dst[e]], h[src[e]]>`` — a small
+  companion kernel (``_edge_dot_kernel``) that fuses the multiply-reduce
+  over feature tiles so the [E, F] products never hit HBM;
+* ``inv_scale`` (the fused degree normalization) and the arc lists are
+  graph *structure*, not trainable data: their cotangents are defined as
+  zero (``float0`` for the int arrays).
 """
 from __future__ import annotations
 
 import functools
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+NODE_TILE = 512
 EDGE_BLOCK = 256
 FEAT_TILE = 128
 
 
-def _kernel(src_ref, dst_ref, w_ref, h_ref, out_ref):
-    e = pl.program_id(1)
+def _agg_kernel(src_ref, dst_ref, w_ref, inv_ref, h_ref, out_ref):
+    eb = pl.program_id(2)
 
-    @pl.when(e == 0)
+    @pl.when(eb == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
     src = src_ref[...]                       # [EB] int32
     dst = dst_ref[...]                       # [EB] int32
     w = w_ref[...].astype(jnp.float32)       # [EB]
-    h = h_ref[...]                           # [N, FT]
-    n = h.shape[0]
+    h = h_ref[...]                           # [N, FT] full gather column
+    nt, ebs = out_ref.shape[0], src.shape[0]
     # gather source rows: [EB, FT]
     gathered = jnp.take(h, src, axis=0).astype(jnp.float32)
-    # scatter as one-hot matmul: S[i, e] = w[e] * (dst[e] == i)  -> [N, EB]
-    rows = jax.lax.broadcasted_iota(jnp.int32, (n, src.shape[0]), 0)
+    # masked one-hot scatter for THIS node tile:
+    # S[i, e] = w[e] * (dst[e] == tile_start + i)  -> [NT, EB]
+    rows = (jax.lax.broadcasted_iota(jnp.int32, (nt, ebs), 0)
+            + pl.program_id(0) * nt)
     scatter = jnp.where(rows == dst[None, :], w[None, :], 0.0)
     out_ref[...] += jax.lax.dot(scatter, gathered,
                                 preferred_element_type=jnp.float32)
+
+    @pl.when(eb == pl.num_programs(2) - 1)
+    def _epilogue():
+        out_ref[...] = out_ref[...] * inv_ref[...].astype(jnp.float32)[:, None]
+
+
+def _edge_dot_kernel(a_ref, b_ref, out_ref):
+    ft = pl.program_id(1)
+
+    @pl.when(ft == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(a_ref[...].astype(jnp.float32)
+                            * b_ref[...].astype(jnp.float32), axis=1)
+
+
+def _node_tile(n: int) -> int:
+    return n if n <= NODE_TILE else NODE_TILE
+
+
+def _aggregate(h, edge_src, edge_dst, edge_weight, inv_scale, *,
+               interpret: bool) -> jnp.ndarray:
+    """Aligned-domain forward: one pallas_call, f32 accumulate + epilogue."""
+    n, f = h.shape
+    e = edge_src.shape[0]
+    nt = _node_tile(n)
+    grid = (n // nt, f // FEAT_TILE, e // EDGE_BLOCK)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, ft, eb: (eb,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, ft, eb: (eb,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, ft, eb: (eb,)),
+            pl.BlockSpec((nt,), lambda i, ft, eb: (i,)),
+            pl.BlockSpec((n, FEAT_TILE), lambda i, ft, eb: (0, ft)),
+        ],
+        out_specs=pl.BlockSpec((nt, FEAT_TILE), lambda i, ft, eb: (i, ft)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        interpret=interpret,
+    )(edge_src, edge_dst, edge_weight, inv_scale, h)
+    return out.astype(h.dtype)
+
+
+def _edge_dot(a, b, *, interpret: bool) -> jnp.ndarray:
+    """Per-edge row dot <a[e, :], b[e, :]> -> [E], f32, feature-tiled."""
+    e, f = a.shape
+    grid = (e // EDGE_BLOCK, f // FEAT_TILE)
+    return pl.pallas_call(
+        _edge_dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((EDGE_BLOCK, FEAT_TILE), lambda eb, ft: (eb, ft)),
+            pl.BlockSpec((EDGE_BLOCK, FEAT_TILE), lambda eb, ft: (eb, ft)),
+        ],
+        out_specs=pl.BlockSpec((EDGE_BLOCK,), lambda eb, ft: (eb,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _aggregate_diff(interpret, h, edge_src, edge_dst, edge_weight,
+                    inv_scale, src_perm):
+    # src_perm is only consumed by the backward pass; in the primal it is an
+    # unused parameter, so XLA dead-code-eliminates the argsort that feeds it
+    # whenever the call is not differentiated.
+    del src_perm
+    return _aggregate(h, edge_src, edge_dst, edge_weight, inv_scale,
+                      interpret=interpret)
+
+
+def _aggregate_diff_fwd(interpret, h, edge_src, edge_dst, edge_weight,
+                        inv_scale, src_perm):
+    out = _aggregate(h, edge_src, edge_dst, edge_weight, inv_scale,
+                     interpret=interpret)
+    return out, (h, edge_src, edge_dst, edge_weight, inv_scale, src_perm)
+
+
+def _aggregate_diff_bwd(interpret, res, g):
+    h, src, dst, w, inv, perm = res
+    g32 = g.astype(jnp.float32)
+    ones = jnp.ones((h.shape[0],), jnp.float32)
+    # h-cotangent: transpose aggregation — the same kernel over the reversed
+    # (src-sorted) arc list, normalization folded into the reverse weights.
+    rev_w = jnp.take(w.astype(jnp.float32) * jnp.take(inv, dst), perm)
+    dh = _aggregate(g32, jnp.take(dst, perm), jnp.take(src, perm), rev_w,
+                    ones, interpret=interpret).astype(h.dtype)
+    # w-cotangent: per-edge row dot of h[src] with the scaled cotangent rows.
+    g_scaled = g32 * inv.astype(jnp.float32)[:, None]
+    dw = _edge_dot(jnp.take(h.astype(jnp.float32), src, axis=0),
+                   jnp.take(g_scaled, dst, axis=0),
+                   interpret=interpret).astype(w.dtype)
+    zero_int = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    # inv_scale is graph structure (degree normalization): zero by design.
+    return (dh, zero_int(src), zero_int(dst), dw, jnp.zeros_like(inv),
+            zero_int(perm))
+
+
+_aggregate_diff.defvjp(_aggregate_diff_fwd, _aggregate_diff_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("num_nodes", "interpret"))
 def csr_aggregate_pallas(h: jnp.ndarray, edge_src: jnp.ndarray,
                          edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
-                         num_nodes: int, interpret: bool = True
+                         num_nodes: int, interpret: bool = True,
+                         inv_scale: jnp.ndarray | None = None,
+                         src_perm: jnp.ndarray | None = None
                          ) -> jnp.ndarray:
     """Pallas path. h: [N, F] -> [N, F] (f32 accumulate, cast back).
 
+    Differentiable w.r.t. ``h`` and ``edge_weight`` (custom VJP, see module
+    docstring). ``inv_scale`` ([N], default all-ones) is multiplied into
+    each output row by the kernel epilogue — pass ``1/max(degree, 1)`` to
+    fuse mean normalization into the same kernel call; it is treated as
+    graph structure (zero cotangent). ``src_perm`` (default
+    ``argsort(edge_src)``, dead-code-eliminated unless differentiated)
+    orders the reversed arc list for the transpose pass of the VJP.
+
     Inputs are padded by :func:`repro.kernels.ops.csr_aggregate`; this
-    function requires N % 8 == 0, F % FEAT_TILE == 0, E % EDGE_BLOCK == 0.
+    function requires F % FEAT_TILE == 0, E % EDGE_BLOCK == 0, and
+    N % 8 == 0 when N <= NODE_TILE else N % NODE_TILE == 0.
     """
     n, f = h.shape
     e = edge_src.shape[0]
-    assert n == num_nodes and f % FEAT_TILE == 0 and e % EDGE_BLOCK == 0, \
+    assert (n == num_nodes and f % FEAT_TILE == 0 and e % EDGE_BLOCK == 0
+            and (n % NODE_TILE == 0 if n > NODE_TILE else n % 8 == 0)), \
         (n, f, e)
-    grid = (f // FEAT_TILE, e // EDGE_BLOCK)
-    out = pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((EDGE_BLOCK,), lambda ft, eb: (eb,)),
-            pl.BlockSpec((EDGE_BLOCK,), lambda ft, eb: (eb,)),
-            pl.BlockSpec((EDGE_BLOCK,), lambda ft, eb: (eb,)),
-            pl.BlockSpec((n, FEAT_TILE), lambda ft, eb: (0, ft)),
-        ],
-        out_specs=pl.BlockSpec((n, FEAT_TILE), lambda ft, eb: (0, ft)),
-        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
-        interpret=interpret,
-    )(edge_src, edge_dst, edge_weight, h)
-    return out.astype(h.dtype)
+    if inv_scale is None:
+        inv_scale = jnp.ones((n,), jnp.float32)
+    if src_perm is None:
+        src_perm = jnp.argsort(edge_src)
+    return _aggregate_diff(interpret, h, edge_src, edge_dst, edge_weight,
+                           inv_scale.astype(jnp.float32), src_perm)

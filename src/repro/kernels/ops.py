@@ -2,6 +2,15 @@
 
 On CPU (this container) the kernels execute in interpret mode; on TPU set
 ``interpret=False`` (the default flips automatically based on the backend).
+
+**Padding contract** (the single contract for every aggregation path — the
+jnp segment-sum in :mod:`repro.gnn.layers`, the oracle in
+:mod:`repro.kernels.ref`, and the Pallas kernel): *padding arcs carry weight
+0 and may point at any in-range row; zero weight is what makes them no-ops,
+not where they park.* By convention :mod:`repro.core.assemble` parks its
+padding arcs at row ``n_pad - 1`` (keeps ``edge_dst`` sorted), while the
+alignment padding added here points at row 0 — both are no-ops on both
+paths, which ``tests/test_kernels.py`` pins.
 """
 from __future__ import annotations
 
@@ -10,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .csr_aggregate import (EDGE_BLOCK, FEAT_TILE, csr_aggregate_pallas)
+from .csr_aggregate import (EDGE_BLOCK, FEAT_TILE, NODE_TILE,
+                            csr_aggregate_pallas)
 from .flash_decode import flash_decode_pallas
 
 
@@ -31,22 +41,41 @@ def _pad_to(x: jnp.ndarray, mult: int, axis: int, value=0) -> jnp.ndarray:
 @functools.partial(jax.jit, static_argnames=("num_nodes", "interpret"))
 def csr_aggregate(h: jnp.ndarray, edge_src: jnp.ndarray,
                   edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
-                  num_nodes: int, interpret: bool | None = None
-                  ) -> jnp.ndarray:
+                  num_nodes: int, interpret: bool | None = None,
+                  inv_scale: jnp.ndarray | None = None) -> jnp.ndarray:
     """Weighted neighbor-sum via the Pallas kernel, with automatic padding.
 
-    Semantics match :func:`repro.kernels.ref.csr_aggregate_ref` exactly.
+    Semantics match :func:`repro.kernels.ref.csr_aggregate_ref` exactly;
+    with ``inv_scale`` given, each output row is additionally multiplied by
+    it inside the kernel epilogue (pass ``1/max(in_degree, 1)`` to get the
+    GCN weighted *mean* as one fused kernel call).
+
+    Differentiable w.r.t. ``h`` and ``edge_weight``: the kernel carries a
+    custom VJP whose transpose pass runs the same kernel over the reversed
+    arc list — the src-sorted permutation it needs is precomputed here (and
+    dead-code-eliminated by XLA on non-differentiated calls). ``inv_scale``
+    and the arc lists are graph structure: zero cotangent by design.
     """
     if interpret is None:
         interpret = not _on_tpu()
     n, f = h.shape
     hp = _pad_to(_pad_to(h, FEAT_TILE, 1), 8, 0)
-    # padding edges carry weight 0 and may point at row 0 safely
+    if hp.shape[0] > NODE_TILE:
+        hp = _pad_to(hp, NODE_TILE, 0)
+    n_pad = hp.shape[0]
+    # alignment padding arcs carry weight 0 and park at row 0 — a no-op on
+    # every path per the module-level padding contract
     es = _pad_to(edge_src, EDGE_BLOCK, 0)
     ed = _pad_to(edge_dst, EDGE_BLOCK, 0)
     ew = _pad_to(edge_weight, EDGE_BLOCK, 0)
-    out = csr_aggregate_pallas(hp, es, ed, ew, num_nodes=hp.shape[0],
-                               interpret=interpret)
+    inv = None
+    if inv_scale is not None:
+        inv = jnp.pad(inv_scale.astype(jnp.float32), (0, n_pad - n),
+                      constant_values=1.0)
+    perm = jnp.argsort(es)           # bwd-only; DCE'd on forward-only calls
+    out = csr_aggregate_pallas(hp, es, ed, ew, num_nodes=n_pad,
+                               interpret=interpret, inv_scale=inv,
+                               src_perm=perm)
     return out[:n, :f].astype(h.dtype)
 
 

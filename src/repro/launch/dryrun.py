@@ -51,8 +51,9 @@ def _compile_combo(cfg, shape_name, mesh, mode, fast: bool = False,
 
 
 def _cost_terms(compiled) -> dict:
-    from repro.launch.hlo_analysis import collective_bytes
-    ca = compiled.cost_analysis() or {}
+    from repro.launch.hlo_analysis import (collective_bytes,
+                                           normalize_cost_analysis)
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "hbm": float(ca.get("bytes accessed", 0.0)),
@@ -240,7 +241,8 @@ def run_gnn_dryrun(multi_pod: bool, out_dir: str) -> dict:
     from repro.gnn import (GNNConfig, gather_partition_tensors,
                            init_partition_models, make_local_train_step,
                            make_sync_train_step)
-    from repro.launch.hlo_analysis import collective_bytes
+    from repro.launch.hlo_analysis import (collective_bytes,
+                                           normalize_cost_analysis)
     from repro.launch.mesh import make_production_mesh
     from repro.optim import adamw_init
 
@@ -301,7 +303,7 @@ def run_gnn_dryrun(multi_pod: bool, out_dir: str) -> dict:
                        out_shardings=(sh_tree(p_sds), sh_tree(o_sds), shard))
         compiled = step.lower(p_sds, o_sds, tensors_sds, keys_sds).compile()
     coll = collective_bytes(compiled.as_text())
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     record.update({
         "collectives": coll,
         "flops_per_device": float(ca.get("flops", 0.0)),
@@ -314,7 +316,8 @@ def run_gnn_dryrun(multi_pod: bool, out_dir: str) -> dict:
         sync_mesh = jax.make_mesh((k,), ("data",))
         with sync_mesh:
             sync = make_sync_train_step(cfg, halo, False, sync_mesh, 1e-2)
-            sync_compiled = sync.lower(p_sds, o_sds, tensors_sds).compile()
+            sync_compiled = sync.lower(p_sds, o_sds, tensors_sds,
+                                       keys_sds).compile()
         sync_coll = collective_bytes(sync_compiled.as_text())
         record["sync_baseline_collectives"] = sync_coll
         record["communication_eliminated_bytes"] = sync_coll["total"]

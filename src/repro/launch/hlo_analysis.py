@@ -44,6 +44,16 @@ _OP_RE = re.compile(
     r"(-start|-done)?[\s(]")
 
 
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """XLA ``Compiled.cost_analysis()`` as one flat dict.
+
+    Newer jax returns a single dict; older versions return one dict per
+    device (a list). Callers always want the per-device view."""
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-collective-type result bytes, plus 'total'. Start/done pairs of
     async collectives are counted once (the -start op carries the shape)."""

@@ -56,6 +56,10 @@ def _build_parser() -> argparse.ArgumentParser:
     run.add_argument("--scheme", default="repli", choices=["inner", "repli"])
     run.add_argument("--mode", default="local", choices=["local", "sync"])
     run.add_argument("--model", default="gcn", choices=["gcn", "sage"])
+    run.add_argument("--use-kernel", action="store_true",
+                     help="route neighbor aggregation through the Pallas "
+                          "one-hot-matmul kernel (differentiable; interpret "
+                          "mode on CPU, native on TPU — DESIGN.md §3/§11)")
     run.add_argument("--hidden-dim", type=int, default=128)
     run.add_argument("--embed-dim", type=int, default=128)
     run.add_argument("--num-layers", type=int, default=3)
@@ -98,6 +102,7 @@ def _cmd_run(args: argparse.Namespace) -> int:
     cfg = PipelineConfig(
         dataset=args.dataset, method=args.method, k=args.k, seed=args.seed,
         scheme=args.scheme, mode=args.mode, model=args.model,
+        use_kernel=args.use_kernel,
         hidden_dim=args.hidden_dim, embed_dim=args.embed_dim,
         num_layers=args.num_layers, dropout=args.dropout,
         epochs=args.epochs, lr=args.lr,

@@ -40,6 +40,9 @@ class PipelineConfig:
     scheme: str = "repli"           # "inner" | "repli" (sync forces repli)
     mode: str = "local"             # "local" | "sync"
     model: str = "gcn"              # "gcn" | "sage"
+    use_kernel: bool = False        # aggregate via the Pallas kernel
+                                    # (DESIGN.md §3/§11); differentiable,
+                                    # so both training modes support it
     hidden_dim: int = 128
     embed_dim: int = 128
     num_layers: int = 3
@@ -101,9 +104,10 @@ class PipelineReport:
         lines.append(f"  assembly     scheme={c['scheme']} "
                      f"n_pad={self.shapes['n_pad']} "
                      f"e_pad={self.shapes['e_pad']} [cache {bhit}]")
+        agg = "pallas-kernel" if c.get("use_kernel") else "jnp"
         lines.append(f"  training     mode={c['mode']} model={c['model']} "
                      f"layers={c['num_layers']} epochs={c['epochs']} "
-                     f"devices={self.num_devices}")
+                     f"aggregation={agg} devices={self.num_devices}")
         if self.collectives:
             lines.append(f"  collectives  {self.collectives['total']} "
                          f"bytes/step (all-gather="
@@ -203,7 +207,8 @@ class Pipeline:
                             feature_dim=int(ds.features.shape[1]),
                             hidden_dim=cfg.hidden_dim,
                             embed_dim=cfg.embed_dim,
-                            num_layers=cfg.num_layers, dropout=cfg.dropout)
+                            num_layers=cfg.num_layers, dropout=cfg.dropout,
+                            use_kernel=cfg.use_kernel)
         mesh = self._resolve_mesh(bundle.batch.k)
         hlo_out: Optional[Dict[str, str]] = {} if cfg.collect_hlo else None
         if cfg.mode == "local":

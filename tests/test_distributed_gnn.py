@@ -76,12 +76,13 @@ def test_sync_step_communicates_and_trains():
     out = run_with_devices(PREAMBLE + """
 halo = build_halo_exchange(ds.graph, labels, batch)
 step = make_sync_train_step(cfg, halo, False, mesh, lr=1e-2)
-hlo = step.lower(params, opt, tensors).compile().as_text()
+keys = jax.random.split(jax.random.PRNGKey(1), 4)
+hlo = step.lower(params, opt, tensors, keys).compile().as_text()
 has_comm = any(c in hlo for c in COLLECTIVES)
 print("HAS_COMM:", has_comm)
 p, o = params, opt
 for i in range(15):
-    p, o, loss = step(p, o, tensors)
+    p, o, loss = step(p, o, tensors, keys)
     if i == 0:
         first = float(loss.mean())
 print("IMPROVED:", float(loss.mean()) < first)
@@ -90,6 +91,56 @@ print("FINITE:", bool(jnp.isfinite(loss).all()))
     assert "HAS_COMM: True" in out
     assert "IMPROVED: True" in out
     assert "FINITE: True" in out
+
+
+def test_sync_step_consumes_dropout_like_local():
+    """Both modes must consume the training config identically: with
+    cfg.dropout > 0 the sync step's loss depends on the dropout key (the
+    old code silently trained the baseline with no dropout), and with
+    dropout == 0 the key is inert."""
+    out = run_with_devices(PREAMBLE + """
+import dataclasses
+halo = build_halo_exchange(ds.graph, labels, batch)
+ka = jax.random.split(jax.random.PRNGKey(1), 4)
+kb = jax.random.split(jax.random.PRNGKey(2), 4)
+cfg_d = dataclasses.replace(cfg, dropout=0.5)
+step_d = make_sync_train_step(cfg_d, halo, False, mesh, lr=1e-2)
+_, _, la = step_d(params, opt, tensors, ka)
+_, _, la2 = step_d(params, opt, tensors, ka)
+_, _, lb = step_d(params, opt, tensors, kb)
+print("KEY_MATTERS:", bool(jnp.abs(la - lb).max() > 1e-6))
+print("DETERMINISTIC:", bool(jnp.abs(la - la2).max() == 0.0))
+step_0 = make_sync_train_step(cfg, halo, False, mesh, lr=1e-2)
+_, _, za = step_0(params, opt, tensors, ka)
+_, _, zb = step_0(params, opt, tensors, kb)
+print("INERT_AT_ZERO:", bool(jnp.abs(za - zb).max() == 0.0))
+""")
+    assert "KEY_MATTERS: True" in out
+    assert "DETERMINISTIC: True" in out
+    assert "INERT_AT_ZERO: True" in out
+
+
+def test_sync_step_trains_through_pallas_kernel():
+    """use_kernel=True is a real path in sync mode too: the shard_map step
+    (check_rep=False — pallas_call has no replication rule) lowers, still
+    contains the halo all_gather, and at dropout=0 matches the jnp path's
+    loss."""
+    out = run_with_devices(PREAMBLE + """
+import dataclasses
+halo = build_halo_exchange(ds.graph, labels, batch)
+keys = jax.random.split(jax.random.PRNGKey(1), 4)
+cfg_k = dataclasses.replace(cfg, use_kernel=True)
+step_k = make_sync_train_step(cfg_k, halo, False, mesh, lr=1e-2)
+hlo = step_k.lower(params, opt, tensors, keys).compile().as_text()
+print("HAS_COMM:", any(c in hlo for c in COLLECTIVES))
+step_j = make_sync_train_step(cfg, halo, False, mesh, lr=1e-2)
+_, _, lj = step_j(params, opt, tensors, keys)
+_, _, lk = step_k(params, opt, tensors, keys)
+print("MAXDIFF:", float(jnp.abs(lj - lk).max()))
+""")
+    assert "HAS_COMM: True" in out
+    maxdiff = float(out.split("MAXDIFF:")[1].strip())
+    assert maxdiff < 1e-4
 
 
 def test_local_matches_single_device_numerics():

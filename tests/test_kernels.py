@@ -72,6 +72,124 @@ def test_csr_aggregate_property(seed, n, f, e):
                                rtol=3e-5, atol=3e-5)
 
 
+def _random_csr(seed, n, f, e, sorted_dst=False, dst_range=None):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    d = rng.integers(0, dst_range or n, e)
+    dst = jnp.asarray(np.sort(d) if sorted_dst else d, jnp.int32)
+    w = jnp.asarray(rng.random(e), jnp.float32)
+    return h, src, dst, w
+
+
+# ---------------------------------------------------------------------------
+# csr_aggregate: custom VJP (the kernel is a real training path now)
+# ---------------------------------------------------------------------------
+def _grad_pair(h, src, dst, w, n):
+    """(d/dh, d/dw) of a non-trivial scalar loss, kernel vs segment-sum."""
+    def loss(agg_fn, h, w):
+        out = agg_fn(h, src, dst, w, num_nodes=n)
+        return (out * jnp.cos(h)).sum() + (out ** 2).sum()
+    gk = jax.grad(lambda h, w: loss(csr_aggregate, h, w), (0, 1))(h, w)
+    gr = jax.grad(lambda h, w: loss(csr_aggregate_ref, h, w), (0, 1))(h, w)
+    return gk, gr
+
+
+@pytest.mark.parametrize("n,f,e,sorted_dst", [
+    (8, 16, 32, True),        # tiny
+    (100, 50, 700, False),    # unaligned everything, unsorted dst
+    (256, 128, 1024, True),   # exactly aligned
+    (600, 30, 1500, False),   # node-tiled (> NODE_TILE after padding)
+])
+def test_csr_aggregate_grads_match_segment_sum(n, f, e, sorted_dst):
+    h, src, dst, w = _random_csr(n * 3 + f, n, f, e, sorted_dst)
+    (dh_k, dw_k), (dh_r, dw_r) = _grad_pair(h, src, dst, w, n)
+    np.testing.assert_allclose(np.asarray(dh_k), np.asarray(dh_r),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(dw_k), np.asarray(dw_r),
+                               rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(4, 90), f=st.integers(1, 80), e=st.integers(1, 400))
+def test_csr_aggregate_grad_property(seed, n, f, e):
+    """Hypothesis sweep for the custom VJP: arbitrary shapes (incl.
+    non-multiples of every tile size), duplicate destinations, zero-degree
+    nodes (dst restricted to the first half guarantees in-degree-0 nodes),
+    unsorted dst — grads must match the segment-sum path."""
+    h, src, dst, w = _random_csr(seed, n, f, e,
+                                 dst_range=max(1, n // 2))
+    (dh_k, dw_k), (dh_r, dw_r) = _grad_pair(h, src, dst, w, n)
+    np.testing.assert_allclose(np.asarray(dh_k), np.asarray(dh_r),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(dw_k), np.asarray(dw_r),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_node_tiled_kernel_beyond_vmem_cap():
+    """A partition with > 8192 nodes (the old whole-node-dimension VMEM cap)
+    must aggregate correctly through the node-tiled grid, forward and
+    backward."""
+    n, f, e = 8700, 8, 4096
+    h, src, dst, w = _random_csr(11, n, f, e, sorted_dst=True)
+    out = csr_aggregate(h, src, dst, w, num_nodes=n)
+    ref = csr_aggregate_ref(h, src, dst, w, num_nodes=n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+    dh_k = jax.grad(lambda h: csr_aggregate(
+        h, src, dst, w, num_nodes=n).sum())(h)
+    dh_r = jax.grad(lambda h: csr_aggregate_ref(
+        h, src, dst, w, num_nodes=n).sum())(h)
+    np.testing.assert_allclose(np.asarray(dh_k), np.asarray(dh_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_padding_contract_zero_weight_arcs_noop_on_both_paths():
+    """THE padding contract (repro.kernels.ops): arcs with weight 0 are
+    no-ops wherever they point — row 0 (the kernel wrapper's alignment
+    padding), row N-1 (assemble's parked arcs), or anywhere else — on both
+    the jnp and kernel paths, with unsorted dst, in value AND gradient."""
+    from repro.gnn.layers import aggregate_mean
+    rng = np.random.default_rng(5)
+    n, f, e = 33, 7, 90
+    h = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)     # unsorted
+    w = jnp.asarray(rng.random(e), jnp.float32)
+    deg = jnp.asarray(np.bincount(np.asarray(dst), weights=np.asarray(w) > 0,
+                                  minlength=n), jnp.float32)
+    # junk arcs: parked at row 0, at row N-1, and scattered — all weight 0
+    junk_dst = np.concatenate([np.zeros(4), np.full(4, n - 1),
+                               rng.integers(0, n, 4)]).astype(np.int32)
+    junk_src = rng.integers(0, n, junk_dst.size).astype(np.int32)
+    src2 = jnp.concatenate([src, jnp.asarray(junk_src)])
+    dst2 = jnp.concatenate([dst, jnp.asarray(junk_dst)])
+    w2 = jnp.concatenate([w, jnp.zeros(junk_dst.size, jnp.float32)])
+    for use_kernel in (False, True):
+        base = aggregate_mean(h, src, dst, w, deg, use_kernel)
+        padded = aggregate_mean(h, src2, dst2, w2, deg, use_kernel)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(padded),
+                                   rtol=1e-5, atol=1e-5)
+        g_base = jax.grad(lambda h: aggregate_mean(
+            h, src, dst, w, deg, use_kernel).var())(h)
+        g_padded = jax.grad(lambda h: aggregate_mean(
+            h, src2, dst2, w2, deg, use_kernel).var())(h)
+        np.testing.assert_allclose(np.asarray(g_base), np.asarray(g_padded),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_mean_kernel_path_is_one_fused_call():
+    """Degree normalization is fused into the kernel epilogue: the kernel
+    path's jaxpr contains exactly one pallas_call."""
+    from repro.gnn.layers import aggregate_mean
+    h, src, dst, w = _random_csr(0, 16, 8, 24)
+    deg = jnp.ones((16,))
+    jaxpr = str(jax.make_jaxpr(
+        lambda h: aggregate_mean(h, src, dst, w, deg, use_kernel=True))(h))
+    assert jaxpr.count("pallas_call") == 1
+
+
 # ---------------------------------------------------------------------------
 # flash_decode
 # ---------------------------------------------------------------------------
@@ -136,6 +254,72 @@ def test_gnn_layer_kernel_path_matches_jnp_path():
     b = aggregate_mean(h, src, dst, w, deg, use_kernel=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5,
                                atol=3e-5)
+
+
+def _tiny_partition_setup(use_kernel, dropout=0.0):
+    import dataclasses
+    from repro.core import (make_arxiv_like, leiden_fusion,
+                            build_partition_batch)
+    from repro.gnn import GNNConfig, gather_partition_tensors
+    ds = make_arxiv_like(n=250, feature_dim=8, num_classes=4, seed=9)
+    labels = leiden_fusion(ds.graph, 2, alpha=0.3)
+    batch = build_partition_batch(ds.graph, labels, scheme="repli")
+    pt = gather_partition_tensors(ds, batch)
+    tensors = {k: jnp.asarray(v) for k, v in {
+        "features": pt.features, "labels": pt.labels,
+        "train_mask": pt.train_mask, "edge_src": pt.edge_src,
+        "edge_dst": pt.edge_dst, "edge_weight": pt.edge_weight,
+        "in_degree": pt.in_degree, "node_mask": pt.node_mask}.items()}
+    cfg = GNNConfig(kind="gcn", feature_dim=8, hidden_dim=16, embed_dim=16,
+                    num_layers=2, dropout=dropout, use_kernel=use_kernel)
+    return ds, batch, cfg, tensors
+
+
+def test_local_train_step_with_kernel_runs_and_matches_jnp():
+    """Regression anchor: one ``make_local_train_step`` step with
+    ``use_kernel=True`` must run (this used to die in a bare AssertionError
+    — the kernel had no VJP) and produce the jnp path's loss, grads, and
+    updated params. Grads are cross-checked twice: against the segment-sum
+    path and against a central finite difference."""
+    from repro.gnn import init_partition_models, make_local_train_step
+    from repro.gnn.train import _loss_one
+    from repro.optim import adamw_init
+    results = {}
+    for use_kernel in (False, True):
+        ds, batch, cfg, tensors = _tiny_partition_setup(use_kernel)
+        params = init_partition_models(jax.random.PRNGKey(0), cfg,
+                                       ds.num_classes, batch.k)
+        opt = jax.vmap(adamw_init)(params)
+        step = jax.jit(make_local_train_step(cfg, False, lr=1e-2))
+        keys = jax.random.split(jax.random.PRNGKey(1), batch.k)
+        new_p, _, loss = step(params, opt, tensors, keys)
+        t0 = jax.tree.map(lambda x: x[0], tensors)
+        p0 = jax.tree.map(lambda x: x[0], params)
+        grads = jax.grad(_loss_one)(p0, cfg, t0, False, None)
+        results[use_kernel] = (np.asarray(loss), new_p, grads, p0, t0, cfg)
+    loss_j, p_j, g_j = results[False][:3]
+    loss_k, p_k, g_k, p0, t0, cfg_k = results[True]
+    np.testing.assert_allclose(loss_k, loss_j, rtol=1e-4, atol=1e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4), g_k, g_j)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-4), p_k, p_j)
+    # finite-difference probe of the kernel-path gradient: perturb the first
+    # GNN layer's weight matrix along a random direction
+    rng = np.random.default_rng(2)
+    d = rng.normal(size=np.asarray(p0["body"]["layers"][0]["w"]).shape)
+    d = jnp.asarray(d / np.linalg.norm(d), jnp.float32)
+    eps = 3e-2
+
+    def at(t):
+        p = jax.tree.map(lambda x: x, p0)
+        p["body"]["layers"][0] = dict(p["body"]["layers"][0],
+                                      w=p0["body"]["layers"][0]["w"] + t * d)
+        return float(_loss_one(p, cfg_k, t0, False, None))
+
+    fd = (at(eps) - at(-eps)) / (2 * eps)
+    analytic = float(jnp.vdot(g_k["body"]["layers"][0]["w"], d))
+    np.testing.assert_allclose(fd, analytic, rtol=5e-2, atol=5e-3)
 
 
 def test_serve_step_flash_decode_matches_jnp_path():

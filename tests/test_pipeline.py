@@ -242,6 +242,29 @@ def test_pipeline_end_to_end_with_cache(tmp_path, karate):
     assert "cache HIT" in rep2.summary()
 
 
+def test_pipeline_use_kernel_trains_and_matches_jnp_path(tmp_path, karate):
+    """`--use-kernel` is a real training path: the run completes (it used
+    to crash forward-only in jax.grad), records the flag, keeps the
+    zero-collectives claim, and with dropout=0 lands within noise of the
+    jnp path's accuracy."""
+    def cfg(use_kernel):
+        return PipelineConfig(dataset="karate", method="leiden_fusion", k=4,
+                              mode="local", epochs=5, classifier_epochs=15,
+                              hidden_dim=16, embed_dim=16, num_layers=2,
+                              dropout=0.0, use_kernel=use_kernel,
+                              cache_dir=str(tmp_path / "c"),
+                              collect_hlo=use_kernel)
+    rep_k = Pipeline(cfg(True)).run(karate)
+    rep_j = Pipeline(cfg(False)).run(karate)
+    assert rep_k.config["use_kernel"] is True
+    assert "aggregation=pallas-kernel" in rep_k.summary()
+    assert "aggregation=jnp" in rep_j.summary()
+    assert rep_k.collectives["total"] == 0    # kernel path stays local-only
+    assert abs(rep_k.accuracy["test"] - rep_j.accuracy["test"]) <= 0.35
+    for split in ("train", "val", "test"):
+        assert 0.0 <= rep_k.accuracy[split] <= 1.0
+
+
 def test_pipeline_centralized_reference(tmp_path, karate):
     cfg = PipelineConfig(dataset="karate", method="single", k=1,
                          scheme="inner", epochs=2, classifier_epochs=5,
