@@ -1,0 +1,119 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+# The two lines above MUST run before jax is first imported (sync/stale need
+# one fake device per partition on CPU), so this module is standalone — it is
+# deliberately NOT in the benchmarks.run registry, where jax is already up.
+"""The communication-vs-accuracy frontier: local <- stale(period=N) -> sync.
+
+Sweeps the three training modes over one partitioned graph — the zero-
+communication paper mode, the every-step halo-exchange baseline, and the
+stale(period=N) middle ground for N in {1, 2, 4, 8, 16} — and records, per
+point: collective bytes per step / per epoch (from the lowered HLO, not
+estimates), classification accuracy, and train wall time. stale(1) must
+reproduce the sync bytes and stale's between-exchange step must lower to
+ZERO collectives; the per-epoch average is strictly decreasing in the
+period (pinned by tests/test_stale_mode.py).
+
+    PYTHONPATH=src python -m benchmarks.frontier            # full sweep
+    PYTHONPATH=src python -m benchmarks.frontier --smoke    # CI gate
+
+``--smoke`` runs the reduced grid {local, stale(4), sync} and asserts the
+frontier ordering: stale(4) moves strictly fewer bytes per epoch than sync
+(and more than local's zero), at test accuracy no worse than local.
+
+Every run appends its rows to ``benchmarks/artifacts/BENCH_frontier.json``
+(mode, period, bytes, accuracy, wall seconds, timestamp) — the frontier
+trajectory across commits, same pattern as BENCH_training_time.json.
+"""
+import argparse
+
+from .common import ARTIFACTS, append_bench_json, emit, partition_store
+
+BENCH_JSON = os.path.join(ARTIFACTS, "BENCH_frontier.json")
+
+PERIODS = (1, 2, 4, 8, 16)
+
+
+def _run_point(ds, mode: str, period: int | None, k: int, epochs: int,
+               classifier_epochs: int, hidden: int):
+    from repro.pipeline import Pipeline, PipelineConfig
+    cfg = PipelineConfig(
+        method="leiden_fusion", k=k, seed=0, scheme="repli",
+        mode=mode, sync_period=period if period is not None else 0,
+        model="gcn", hidden_dim=hidden, embed_dim=hidden, num_layers=2,
+        dropout=0.0, epochs=epochs, lr=1e-2,
+        classifier_epochs=classifier_epochs, collect_hlo=True)
+    report = Pipeline(cfg, store=partition_store()).run(ds)
+    coll = report.collectives
+    return {
+        "mode": mode,
+        "period": period if mode == "stale" else None,
+        "k": k, "epochs": epochs,
+        "bytes_per_step": coll.get("total", 0),
+        "bytes_per_epoch_avg": coll.get("per_epoch_avg", coll.get("total", 0)),
+        "stale_step_bytes": coll.get("stale_step_total", 0),
+        "n_exchange_epochs": coll.get("n_exchange_epochs"),
+        "val_acc": round(report.accuracy.get("val", 0.0), 4),
+        "test_acc": round(report.accuracy.get("test", 0.0), 4),
+        "train_wall_s": round(report.timings["train"], 2),
+    }
+
+
+def run(smoke: bool = False):
+    from .common import arxiv_like
+    k = 4
+    if smoke:
+        ds = arxiv_like(n=600)
+        grid = [("local", None), ("stale", 4), ("sync", None)]
+        epochs, classifier_epochs, hidden = 20, 60, 16
+    else:
+        ds = arxiv_like(n=1600)
+        grid = ([("local", None)] + [("stale", p) for p in PERIODS]
+                + [("sync", None)])
+        epochs, classifier_epochs, hidden = 16, 80, 32
+    rows = [_run_point(ds, mode, period, k, epochs, classifier_epochs, hidden)
+            for mode, period in grid]
+    emit("frontier", rows)
+    append_bench_json(BENCH_JSON, rows)
+
+    by = {(r["mode"], r["period"]): r for r in rows}
+    if smoke:
+        local, st4, sync = by[("local", None)], by[("stale", 4)], by[("sync", None)]
+        assert st4["bytes_per_epoch_avg"] < sync["bytes_per_epoch_avg"], (
+            f"stale(4) must move strictly fewer bytes/epoch than sync: "
+            f"{st4['bytes_per_epoch_avg']} vs {sync['bytes_per_epoch_avg']}")
+        assert st4["bytes_per_epoch_avg"] > local["bytes_per_epoch_avg"] == 0, (
+            f"stale(4) sits strictly between sync and local's zero bytes: "
+            f"{st4['bytes_per_epoch_avg']}")
+        assert st4["stale_step_bytes"] == 0, (
+            "stale between-exchange step must be collective-free, got "
+            f"{st4['stale_step_bytes']}")
+        assert st4["test_acc"] >= local["test_acc"], (
+            f"stale(4) accuracy must be no worse than local: "
+            f"{st4['test_acc']} vs {local['test_acc']}")
+        print(f"# frontier smoke OK: local=0 < stale(4)="
+              f"{st4['bytes_per_epoch_avg']} < sync="
+              f"{sync['bytes_per_epoch_avg']} bytes/epoch; "
+              f"acc stale={st4['test_acc']} >= local={local['test_acc']}")
+    else:
+        stale_rows = [by[("stale", p)] for p in PERIODS]
+        avgs = [r["bytes_per_epoch_avg"] for r in stale_rows]
+        assert all(a > b for a, b in zip(avgs, avgs[1:])), (
+            f"per-epoch bytes must strictly decrease with the period: {avgs}")
+        assert avgs[0] == by[("sync", None)]["bytes_per_epoch_avg"], (
+            "stale(1) must reproduce the sync traffic")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="the communication-vs-accuracy frontier: "
+                    "local <- stale(period=N) -> sync")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: {local, stale(4), sync} + frontier asserts")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,9 @@ from .partitioners import (PARTITIONERS, get_partitioner, lpa_partition,
 from .spec import (PartitionResult, PartitionerSpec, partition_from_spec,
                    parse_spec_text)
 from .metrics import PartitionReport, evaluate_partition
-from .assemble import (PartitionBatch, HaloExchangeSpec,
-                       build_partition_batch, build_halo_exchange)
+from .assemble import (INTEGRATION_KINDS, PartitionBatch, HaloExchangeSpec,
+                       average_partition_params, build_partition_batch,
+                       build_halo_exchange, integrate_models)
 
 __all__ = [
     # the vectorized partitioning engine (DESIGN.md §10)
@@ -40,4 +41,6 @@ __all__ = [
     "split_into_components",
     "PartitionReport", "evaluate_partition", "PartitionBatch",
     "HaloExchangeSpec", "build_partition_batch", "build_halo_exchange",
+    # model integration (DESIGN.md §12)
+    "INTEGRATION_KINDS", "average_partition_params", "integrate_models",
 ]

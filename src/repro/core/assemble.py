@@ -134,6 +134,70 @@ class HaloExchangeSpec:
     h_pad: int
 
 
+# ---------------------------------------------------------------------------
+# Model integration — aggregate the k per-partition GNNs before assembly
+# (randomized-partition model aggregation, arxiv 2305.09887; DESIGN.md §12)
+# ---------------------------------------------------------------------------
+INTEGRATION_KINDS = ("none", "model_avg", "ensemble")
+
+
+def average_partition_params(params, weights: Optional[np.ndarray] = None):
+    """Parameter-average k stacked per-partition models.
+
+    ``params`` is any pytree whose float leaves carry a leading partition
+    axis of size k (the layout of ``init_partition_models``). Returns a
+    pytree of the SAME shape: the (optionally ``weights``-weighted) mean
+    over the partition axis, broadcast back to all k rows — so the result
+    drops into every per-partition step/eval function unchanged.
+
+    Averaging k identical replicas is a fixed point (pinned by a hypothesis
+    property in tests/test_stale_mode.py)."""
+    import jax
+    import jax.numpy as jnp
+    if weights is None:
+        avg = jax.tree.map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), params)
+    else:
+        w = jnp.asarray(weights, dtype=jnp.float32)
+        if w.ndim != 1:
+            raise ValueError(f"weights must be 1-D, got shape {w.shape}")
+        w = w / jnp.maximum(w.sum(), 1e-12)
+
+        def wavg(x):
+            if w.shape[0] != x.shape[0]:
+                raise ValueError(
+                    f"weights length {w.shape[0]} != partition axis "
+                    f"{x.shape[0]}")
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.sum(x.astype(jnp.float32) * wb, axis=0)
+        avg = jax.tree.map(wavg, params)
+    return jax.tree.map(
+        lambda a, x: jnp.broadcast_to(a[None], x.shape).astype(x.dtype),
+        avg, params)
+
+
+def integrate_models(params, kind: str = "model_avg",
+                     weights: Optional[np.ndarray] = None):
+    """Dispatch the parameter-level integration step.
+
+    ``"none"`` returns params untouched; ``"model_avg"`` parameter-averages
+    (see :func:`average_partition_params`). ``"ensemble"`` is prediction-
+    level and therefore deliberately NOT handled here — embedding averaging
+    needs the mode's own forward, see ``repro.gnn.train.apply_integration``.
+    """
+    if kind not in INTEGRATION_KINDS:
+        raise ValueError(
+            f"integration kind must be one of {INTEGRATION_KINDS}, "
+            f"got {kind!r}")
+    if kind == "ensemble":
+        raise ValueError(
+            "ensemble integration is prediction-level; use "
+            "repro.gnn.train.apply_integration with the mode's forward")
+    if kind == "none":
+        return params
+    return average_partition_params(params, weights)
+
+
 def build_halo_exchange(g: Graph, labels: np.ndarray,
                         batch: PartitionBatch) -> HaloExchangeSpec:
     """Plan per-pair halo transfers for the synchronized baseline (Repli batch)."""

@@ -1,14 +1,21 @@
 """GNN substrate: GCN/GraphSAGE models + the paper's training pipeline."""
 from .model import GNNConfig, gnn_forward, init_gnn, init_mlp, mlp_forward
-from .train import (PartitionTensors, gather_partition_tensors,
-                    init_partition_models, make_local_train_step,
-                    make_sync_train_step, make_sync_forward, train_local,
+from .train import (PartitionTensors, apply_integration,
+                    gather_partition_tensors,
+                    init_partition_models, make_halo_forward,
+                    make_local_train_step, make_stale_train_steps,
+                    make_sync_train_step, make_sync_forward,
+                    stale_bytes_per_epoch, stale_exchange_epochs,
+                    train_local, train_stale,
                     train_sync, train_classifier, compute_embeddings,
                     pool_embeddings, mean_rocauc)
 
 __all__ = ["GNNConfig", "gnn_forward", "init_gnn", "init_mlp", "mlp_forward",
-           "PartitionTensors", "gather_partition_tensors",
-           "init_partition_models", "make_local_train_step",
-           "make_sync_train_step", "make_sync_forward", "train_local",
-           "train_sync", "train_classifier", "compute_embeddings",
-           "pool_embeddings", "mean_rocauc"]
+           "PartitionTensors", "apply_integration",
+           "gather_partition_tensors",
+           "init_partition_models", "make_halo_forward",
+           "make_local_train_step", "make_stale_train_steps",
+           "make_sync_train_step", "make_sync_forward",
+           "stale_bytes_per_epoch", "stale_exchange_epochs", "train_local",
+           "train_stale", "train_sync", "train_classifier",
+           "compute_embeddings", "pool_embeddings", "mean_rocauc"]

@@ -1,6 +1,6 @@
 """Distributed GNN training — the paper's pipeline, SPMD-native.
 
-Two training modes over the k partition subgraphs:
+Three training modes over the k partition subgraphs:
 
 * **local** (the paper's contribution): every partition trains its own GNN
   replica with NO inter-partition communication. Implemented as a vmap over
@@ -14,14 +14,22 @@ Two training modes over the k partition subgraphs:
   `shard_map`. The collective bytes this injects are exactly the paper's
   "continuous communication".
 
+* **stale** (the middle ground, DESIGN.md §12): the same `shard_map` halo
+  plumbing as sync, but boundary activations are exchanged only every
+  ``sync_period`` epochs; in between, layers read the *frozen* halo rows
+  cached at the last exchange — zero collectives on those epochs. The two
+  limit cases reduce exactly to the modes above (``period=1`` ≡ sync,
+  ``period=∞`` ≡ local) and are pinned by `tests/test_stale_mode.py`.
+
 After training, per-partition embeddings of *owned* nodes are scattered back
 into a global [n, embed] table and an MLP classifier is trained on it
-(paper §5.2)."""
+(paper §5.2). An optional *integration* step (`repro.core.assemble.
+integrate_models`) parameter-averages or ensembles the k replicas first."""
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -139,7 +147,8 @@ def make_local_train_step(cfg: GNNConfig, multilabel: bool, lr: float = 1e-2
 def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
                 epochs: int = 60, lr: float = 1e-2, seed: int = 0,
                 mesh: Optional[Mesh] = None,
-                hlo_out: Optional[Dict[str, str]] = None
+                hlo_out: Optional[Dict[str, str]] = None,
+                integrate: str = "none"
                 ) -> Tuple[PyTree, np.ndarray]:
     """Paper's local training. Returns (params, global_embeddings [n, E]).
 
@@ -175,7 +184,8 @@ def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
     for e in range(epochs):
         keys = jax.random.split(jax.random.fold_in(key, e), k)
         params, opt, loss = step(params, opt, tensors, keys)
-    emb = compute_embeddings(params, cfg, tensors)
+    params, emb = apply_integration(
+        params, integrate, lambda p: compute_embeddings(p, cfg, tensors), k)
     return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
                                    cfg.embed_dim)
 
@@ -185,6 +195,41 @@ def compute_embeddings(params, cfg: GNNConfig, tensors) -> jnp.ndarray:
         emb, _ = _forward_one(p, cfg, t)
         return emb
     return jax.jit(jax.vmap(one))(params, tensors)
+
+
+def apply_integration(params, integrate: Optional[str],
+                      emb_fn: Callable[[Any], jnp.ndarray], k: int
+                      ) -> Tuple[PyTree, jnp.ndarray]:
+    """Integrate the k per-partition models before embedding assembly.
+
+    ``emb_fn(params) -> [k, N_pad, E]`` is the mode's own embedding forward
+    (plain vmap for local, halo-refreshing shard_map for sync/stale), so the
+    integration step composes with every training mode.
+
+    - ``"none"``      — k independent models, as trained (the paper).
+    - ``"model_avg"`` — parameter-average the replicas
+      (:func:`repro.core.assemble.average_partition_params`; randomized-
+      partition model aggregation, arxiv 2305.09887) and embed with the
+      averaged model everywhere.
+    - ``"ensemble"``  — keep the k models but embed each subgraph with ALL
+      of them and average the embeddings (prediction-level aggregation).
+    """
+    from repro.core.assemble import average_partition_params
+    if integrate in (None, "none"):
+        return params, emb_fn(params)
+    if integrate == "model_avg":
+        params = average_partition_params(params)
+        return params, emb_fn(params)
+    if integrate == "ensemble":
+        acc = None
+        for m in range(k):
+            pm = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[m:m + 1], x.shape), params)
+            emb = emb_fn(pm)
+            acc = emb if acc is None else acc + emb
+        return params, acc / float(k)
+    raise ValueError(
+        f"integrate must be none|model_avg|ensemble, got {integrate!r}")
 
 
 def pool_embeddings(emb: np.ndarray, pt: PartitionTensors, n: int,
@@ -199,18 +244,29 @@ def pool_embeddings(emb: np.ndarray, pt: PartitionTensors, n: int,
 
 
 # ---------------------------------------------------------------------------
-# SYNC baseline (halo exchange every layer — the traffic LF eliminates)
+# Halo-refreshing forward, shared by the SYNC baseline and STALE mode.
+#
+# Three refresh disciplines over the same `shard_map` halo plumbing:
+#   "exchange" — live all_gather before every layer (sync semantics); the
+#                post-refresh activations are returned as per-layer caches
+#   "cached"   — halo rows overwritten from the caches of the last exchange
+#                epoch (zero collectives; the staleness of DESIGN.md §12)
+#   "frozen"   — no refresh at all: halo rows stay whatever local compute
+#                produces, which is exactly `gnn_forward` (local semantics)
 # ---------------------------------------------------------------------------
-def make_sync_forward(cfg: GNNConfig, halo: HaloExchangeSpec, axis: str = "data"):
-    """Forward with halo refresh between layers, for use inside shard_map.
+def make_halo_forward(cfg: GNNConfig, halo: HaloExchangeSpec,
+                      axis: str = "data"):
+    """Build ``forward(params, t, my_idx, dropout_key, caches, refresh_mode)``
+    for use inside shard_map (one partition per ``axis`` device).
 
-    Works on a single partition per device (k == mesh data size). The halo
-    exchange is an all_gather of per-destination send buffers.
+    Returns ``(embeddings, logits, new_caches)`` where ``new_caches`` is the
+    tuple of post-refresh layer inputs under ``refresh_mode="exchange"`` and
+    ``None`` otherwise.
 
     ``dropout_key`` mirrors :func:`repro.gnn.model.gnn_forward` exactly
-    (dropout after every non-final layer at rate ``cfg.dropout``), so the
-    sync baseline consumes the training config identically to local mode —
-    earlier revisions silently trained the baseline without dropout, an
+    (dropout after every non-final layer at rate ``cfg.dropout``), so every
+    halo mode consumes the training config identically to local mode —
+    earlier revisions silently trained the sync baseline without dropout, an
     unfair comparison in the paper's favor. Pass ``None`` for inference."""
     send_rows = jnp.asarray(halo.send_rows)   # [k, k, H]
     recv_rows = jnp.asarray(halo.recv_rows)   # [k, k, H]
@@ -230,15 +286,32 @@ def make_sync_forward(cfg: GNNConfig, halo: HaloExchangeSpec, axis: str = "data"
             jnp.where(valid, flat_in, h[jnp.maximum(flat_rows, 0)]))
         return h
 
+    def apply_cache(h: jnp.ndarray, my_idx: jnp.ndarray,
+                    cache: jnp.ndarray) -> jnp.ndarray:
+        # Overwrite exactly the rows a live exchange would refresh, but from
+        # the frozen snapshot instead of the wire — no collective lowered.
+        rows = recv_rows[my_idx].reshape(-1)
+        safe = jnp.maximum(rows, 0)
+        valid = (rows >= 0)[:, None]
+        h = h.at[safe].set(jnp.where(valid, cache[safe], h[safe]))
+        return h
+
     from .layers import gcn_layer, sage_layer
     layer_fn = gcn_layer if cfg.kind == "gcn" else sage_layer
 
-    def forward(params, t, my_idx, dropout_key=None):
+    def forward(params, t, my_idx, dropout_key=None, caches=None,
+                refresh_mode: str = "exchange"):
+        assert refresh_mode in ("exchange", "cached", "frozen"), refresh_mode
         h = t["features"] * t["node_mask"][:, None]
         n_layers = len(params["body"]["layers"])
+        new_caches = []
         for i, lp in enumerate(params["body"]["layers"]):
             last = i == n_layers - 1
-            h = refresh(h, my_idx)        # fetch fresh halo activations
+            if refresh_mode == "exchange":
+                h = refresh(h, my_idx)    # fetch fresh halo activations
+                new_caches.append(h)      # snapshot for the stale epochs
+            elif refresh_mode == "cached":
+                h = apply_cache(h, my_idx, caches[i])
             h = layer_fn(lp, h, t["edge_src"], t["edge_dst"],
                          t["edge_weight"], t["in_degree"],
                          activate=not last, use_kernel=cfg.use_kernel)
@@ -248,6 +321,25 @@ def make_sync_forward(cfg: GNNConfig, halo: HaloExchangeSpec, axis: str = "data"
                 keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h.shape)
                 h = jnp.where(keep, h / (1 - cfg.dropout), 0.0)
         logits = h @ params["head"]["w"] + params["head"]["b"]
+        caches_out = tuple(new_caches) if refresh_mode == "exchange" else None
+        return h, logits, caches_out
+    return forward
+
+
+# ---------------------------------------------------------------------------
+# SYNC baseline (halo exchange every layer — the traffic LF eliminates)
+# ---------------------------------------------------------------------------
+def make_sync_forward(cfg: GNNConfig, halo: HaloExchangeSpec, axis: str = "data"):
+    """Forward with live halo refresh before every layer (sync semantics).
+
+    Thin wrapper over :func:`make_halo_forward` with
+    ``refresh_mode="exchange"``, kept for API stability — returns
+    ``(embeddings, logits)``."""
+    halo_forward = make_halo_forward(cfg, halo, axis)
+
+    def forward(params, t, my_idx, dropout_key=None):
+        h, logits, _ = halo_forward(params, t, my_idx, dropout_key,
+                                    refresh_mode="exchange")
         return h, logits
     return forward
 
@@ -292,7 +384,8 @@ def make_sync_train_step(cfg: GNNConfig, halo: HaloExchangeSpec,
 def train_sync(ds: NodeDataset, batch: PartitionBatch,
                halo: HaloExchangeSpec, cfg: GNNConfig, mesh: Mesh,
                epochs: int = 60, lr: float = 1e-2, seed: int = 0,
-               hlo_out: Optional[Dict[str, str]] = None
+               hlo_out: Optional[Dict[str, str]] = None,
+               integrate: str = "none"
                ) -> Tuple[PyTree, np.ndarray]:
     """DGL-style synchronized baseline, mirroring :func:`train_local`.
 
@@ -334,9 +427,206 @@ def train_sync(ds: NodeDataset, batch: PartitionBatch,
         return emb[None]
 
     pspec = P("data")
-    emb = jax.jit(shard_map(eval_one, mesh=mesh, in_specs=(pspec, pspec),
-                            out_specs=pspec,
-                            check_rep=False))(params, tensors)
+    emb_fn = jax.jit(shard_map(eval_one, mesh=mesh, in_specs=(pspec, pspec),
+                               out_specs=pspec, check_rep=False))
+    params, emb = apply_integration(
+        params, integrate, lambda p: emb_fn(p, tensors), k)
+    return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
+                                   cfg.embed_dim)
+
+
+# ---------------------------------------------------------------------------
+# STALE mode (periodic halo exchange — the comm-vs-accuracy middle ground)
+# ---------------------------------------------------------------------------
+def stale_exchange_epochs(epochs: int, period: Optional[int]) -> List[int]:
+    """Epochs at which stale mode performs a live halo exchange.
+
+    ``period >= 1`` exchanges at every epoch ``e`` with ``e % period == 0``
+    (epoch 0 always exchanges); ``period`` in ``{None, 0}`` or negative
+    means *never* exchange — the ``stale(∞)`` limit that reduces to local
+    training. ``period=1`` exchanges every epoch — the sync limit."""
+    if not period or period < 1:
+        return []
+    return [e for e in range(epochs) if e % period == 0]
+
+
+def stale_bytes_per_epoch(exchange_bytes: int, epochs: int,
+                          period: Optional[int]) -> List[int]:
+    """Collective bytes each epoch moves: ``exchange_bytes`` on exchange
+    epochs and exactly 0 in between. Summing and dividing by ``epochs``
+    gives the amortized bytes/epoch the PipelineReport records; the list is
+    monotone non-increasing in ``period`` element-wise summed (pinned by a
+    hypothesis sweep in tests/test_stale_mode.py)."""
+    on = set(stale_exchange_epochs(epochs, period))
+    return [int(exchange_bytes) if e in on else 0 for e in range(epochs)]
+
+
+def _stale_cache_shapes(cfg: GNNConfig, n_pad: int) -> List[Tuple[int, int]]:
+    """Per-layer cache shapes: the layer-i *input* activations [N_pad, F_i]."""
+    dims = [cfg.feature_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1)
+    return [(n_pad, d) for d in dims]
+
+
+def make_stale_train_steps(cfg: GNNConfig, halo: HaloExchangeSpec,
+                           multilabel: bool, mesh: Mesh, lr: float = 1e-2
+                           ) -> Dict[str, Callable]:
+    """The three shard_map train steps of stale mode, keyed by discipline:
+
+    - ``"exchange"``: ``(params, opt, t, keys) -> (params, opt, loss,
+      caches)`` — identical math (and identical collectives) to the sync
+      step, plus the per-layer post-refresh activation snapshots.
+    - ``"stale"``: ``(params, opt, t, keys, caches) -> (params, opt, loss)``
+      — halo rows read the frozen snapshots; lowers to ZERO collectives.
+    - ``"frozen"``: ``(params, opt, t, keys) -> (params, opt, loss)`` — no
+      halo refresh at all; used before the first exchange (period=∞), where
+      it matches the local vmap step partition-for-partition.
+    """
+    from jax.experimental.shard_map import shard_map
+    forward = make_halo_forward(cfg, halo)
+
+    def loss_of(refresh_mode):
+        def loss_fn(params, t, my_idx, dropout_key, caches):
+            _, logits, new_caches = forward(params, t, my_idx, dropout_key,
+                                            caches, refresh_mode)
+            if multilabel:
+                loss = sigmoid_bce(logits, t["labels"], t["train_mask"])
+            else:
+                loss = softmax_xent(logits, t["labels"], t["train_mask"])
+            return loss, new_caches
+        return loss_fn
+
+    def local_step_of(refresh_mode):
+        loss_fn = loss_of(refresh_mode)
+
+        def local_step(params, opt, t, keys, *maybe_caches):
+            # leading axis is the local shard of k: size 1 per device
+            params1 = jax.tree.map(lambda x: x[0], params)
+            opt1 = jax.tree.map(lambda x: x[0], opt)
+            t1 = jax.tree.map(lambda x: x[0], t)
+            caches1 = None
+            if maybe_caches:
+                caches1 = jax.tree.map(lambda x: x[0], maybe_caches[0])
+            my_idx = jax.lax.axis_index("data")
+            (loss, new_caches), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params1, t1, my_idx, keys[0], caches1)
+            new_p, new_o = adamw_update(grads, opt1, params1, lr)
+            expand = lambda x: x[None]
+            outs = (jax.tree.map(expand, new_p), jax.tree.map(expand, new_o),
+                    loss[None])
+            if refresh_mode == "exchange":
+                outs += (jax.tree.map(expand, new_caches),)
+            return outs
+        return local_step
+
+    pspec = P("data")
+    # check_rep=False: pallas_call (the use_kernel aggregation path) has no
+    # shard_map replication rule (same rationale as make_sync_train_step)
+    ex = shard_map(local_step_of("exchange"), mesh=mesh,
+                   in_specs=(pspec, pspec, pspec, pspec),
+                   out_specs=(pspec, pspec, pspec, pspec), check_rep=False)
+    st = shard_map(local_step_of("cached"), mesh=mesh,
+                   in_specs=(pspec, pspec, pspec, pspec, pspec),
+                   out_specs=(pspec, pspec, pspec), check_rep=False)
+    fz = shard_map(local_step_of("frozen"), mesh=mesh,
+                   in_specs=(pspec, pspec, pspec, pspec),
+                   out_specs=(pspec, pspec, pspec), check_rep=False)
+    return {"exchange": jax.jit(ex), "stale": jax.jit(st),
+            "frozen": jax.jit(fz)}
+
+
+def train_stale(ds: NodeDataset, batch: PartitionBatch,
+                halo: HaloExchangeSpec, cfg: GNNConfig, mesh: Mesh,
+                epochs: int = 60, lr: float = 1e-2, seed: int = 0,
+                sync_period: Optional[int] = 4,
+                hlo_out: Optional[Dict[str, str]] = None,
+                integrate: str = "none"
+                ) -> Tuple[PyTree, np.ndarray]:
+    """Periodic stale-synchronization training (DESIGN.md §12).
+
+    Mirrors :func:`train_sync` (same mesh contract, same init/key schedule
+    as BOTH other modes), but live halo exchange happens only at the epochs
+    of :func:`stale_exchange_epochs`; other epochs train against the halo
+    activations frozen at the last exchange. ``sync_period=1`` is the sync
+    limit; ``sync_period in {0, None}`` never exchanges — the local limit.
+
+    ``hlo_out`` receives ``"hlo"`` (the program that moves bytes: the
+    exchange step, or the frozen step when no exchange ever happens) and
+    ``"hlo_stale"`` (the between-exchange program — proven collective-free
+    in tests). Returns (params, global_embeddings [n, E])."""
+    from jax.experimental.shard_map import shard_map
+
+    k = batch.k
+    data_size = int(mesh.shape["data"])
+    if data_size != k:
+        raise ValueError(
+            f"stale training needs one partition per device: mesh data axis "
+            f"is {data_size} but k={k}. On CPU, relaunch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={k}.")
+    pt = gather_partition_tensors(ds, batch)
+    key = jax.random.PRNGKey(seed)
+    params = init_partition_models(key, cfg, ds.num_classes, k)
+    opt = jax.vmap(adamw_init)(params)
+    tensors = {n: jnp.asarray(v) for n, v in _tensors_dict(pt).items()}
+
+    schedule = set(stale_exchange_epochs(epochs, sync_period))
+    n_exchange = len(schedule)
+    has_stale_epochs = epochs > n_exchange
+    steps = make_stale_train_steps(cfg, halo, ds.multilabel, mesh, lr)
+    step_ex, step_st, step_fz = (steps["exchange"], steps["stale"],
+                                 steps["frozen"])
+
+    if hlo_out is not None:
+        keys0 = jax.random.split(jax.random.fold_in(key, 0), k)
+        if n_exchange:
+            compiled_ex = step_ex.lower(params, opt, tensors,
+                                        keys0).compile()
+            hlo_out["hlo"] = compiled_ex.as_text()
+            step_ex = compiled_ex
+            if has_stale_epochs:
+                caches0 = tuple(
+                    jnp.zeros((k,) + s, jnp.float32)
+                    for s in _stale_cache_shapes(cfg, batch.n_pad))
+                compiled_st = step_st.lower(params, opt, tensors, keys0,
+                                            caches0).compile()
+                hlo_out["hlo_stale"] = compiled_st.as_text()
+                step_st = compiled_st
+        else:
+            compiled_fz = step_fz.lower(params, opt, tensors,
+                                        keys0).compile()
+            # period=∞ never moves a byte: the frozen step is both the
+            # "whole training" program and the between-exchange program
+            hlo_out["hlo"] = compiled_fz.as_text()
+            hlo_out["hlo_stale"] = compiled_fz.as_text()
+            step_fz = compiled_fz
+
+    caches = None
+    for e in range(epochs):
+        keys = jax.random.split(jax.random.fold_in(key, e), k)
+        if e in schedule:
+            params, opt, loss, caches = step_ex(params, opt, tensors, keys)
+        elif caches is None:
+            params, opt, loss = step_fz(params, opt, tensors, keys)
+        else:
+            params, opt, loss = step_st(params, opt, tensors, keys, caches)
+
+    # Embedding pass mirrors training: a live refresh when the run ever
+    # exchanged (sync limit stays exact), the plain local forward otherwise
+    # (local limit stays exact).
+    forward = make_halo_forward(cfg, halo)
+    eval_mode = "exchange" if n_exchange else "frozen"
+
+    def eval_one(p, t):
+        p1 = jax.tree.map(lambda x: x[0], p)
+        t1 = jax.tree.map(lambda x: x[0], t)
+        emb, _, _ = forward(p1, t1, jax.lax.axis_index("data"),
+                            refresh_mode=eval_mode)
+        return emb[None]
+
+    pspec = P("data")
+    emb_fn = jax.jit(shard_map(eval_one, mesh=mesh, in_specs=(pspec, pspec),
+                               out_specs=pspec, check_rep=False))
+    params, emb = apply_integration(
+        params, integrate, lambda p: emb_fn(p, tensors), k)
     return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
                                    cfg.embed_dim)
 

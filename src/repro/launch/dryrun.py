@@ -231,16 +231,19 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mode: str,
 
 def run_gnn_dryrun(multi_pod: bool, out_dir: str) -> dict:
     """The paper's own workload on the production mesh: one partition per
-    chip, (a) LF local training — must be ZERO collectives — and (b) the
+    chip, (a) LF local training — must be ZERO collectives — (b) the
     synchronized halo-exchange baseline — whose collective bytes quantify
-    exactly the traffic the paper eliminates."""
+    exactly the traffic the paper eliminates — and (c) the stale(period=N)
+    middle ground: its exchange step moves the sync bytes, its
+    between-exchange step must lower to zero (DESIGN.md §12)."""
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import (make_arxiv_like, leiden_fusion,
                             build_partition_batch, build_halo_exchange)
     from repro.gnn import (GNNConfig, gather_partition_tensors,
                            init_partition_models, make_local_train_step,
-                           make_sync_train_step)
+                           make_stale_train_steps, make_sync_train_step,
+                           stale_bytes_per_epoch)
     from repro.launch.hlo_analysis import (collective_bytes,
                                            normalize_cost_analysis)
     from repro.launch.mesh import make_production_mesh
@@ -321,6 +324,28 @@ def run_gnn_dryrun(multi_pod: bool, out_dir: str) -> dict:
         sync_coll = collective_bytes(sync_compiled.as_text())
         record["sync_baseline_collectives"] = sync_coll
         record["communication_eliminated_bytes"] = sync_coll["total"]
+        # --- stale(period=N): exchange step should match the sync traffic,
+        # the between-exchange step must be collective-free -----------------
+        from repro.gnn.train import _stale_cache_shapes
+        with sync_mesh:
+            steps = make_stale_train_steps(cfg, halo, False, sync_mesh, 1e-2)
+            ex_compiled = steps["exchange"].lower(
+                p_sds, o_sds, tensors_sds, keys_sds).compile()
+            caches_sds = tuple(
+                jax.ShapeDtypeStruct((k,) + s, jnp.float32)
+                for s in _stale_cache_shapes(cfg, batch.n_pad))
+            st_compiled = steps["stale"].lower(
+                p_sds, o_sds, tensors_sds, keys_sds, caches_sds).compile()
+        ex_coll = collective_bytes(ex_compiled.as_text())
+        st_coll = collective_bytes(st_compiled.as_text())
+        record["stale_exchange_collectives"] = ex_coll
+        record["stale_step_collectives"] = st_coll
+        record["stale_step_zero_collectives"] = st_coll["total"] == 0
+        # the comm-vs-staleness frontier this mesh would see over 16 epochs
+        record["stale_frontier_bytes_per_epoch"] = {
+            str(p): int(np.mean(
+                stale_bytes_per_epoch(ex_coll["total"], 16, p)))
+            for p in (1, 2, 4, 8, 16)}
         # fair point-to-point lower bound (the all-gather implementation
         # over-fetches): actual halo rows x feature bytes x layers x fwd+bwd
         real_rows = int((halo_send >= 0).sum())
@@ -332,7 +357,8 @@ def run_gnn_dryrun(multi_pod: bool, out_dir: str) -> dict:
         json.dump(record, f, indent=1, default=str)
     print(f"[OK ] gnn_lf_local {_mesh_tag(multi_pod)} "
           f"zero_collectives={record['zero_collectives']} "
-          f"sync_bytes={record.get('communication_eliminated_bytes')}",
+          f"sync_bytes={record.get('communication_eliminated_bytes')} "
+          f"stale_step_zero={record.get('stale_step_zero_collectives')}",
           flush=True)
     return record
 

@@ -54,7 +54,20 @@ def _build_parser() -> argparse.ArgumentParser:
     run.add_argument("--k", type=int, default=8)
     run.add_argument("--seed", type=int, default=0)
     run.add_argument("--scheme", default="repli", choices=["inner", "repli"])
-    run.add_argument("--mode", default="local", choices=["local", "sync"])
+    run.add_argument("--mode", default="local",
+                     choices=["local", "sync", "stale"],
+                     help="local = zero communication (the paper); sync = "
+                          "halo exchange every step; stale = exchange every "
+                          "--sync-period epochs, frozen halos in between "
+                          "(DESIGN.md §12)")
+    run.add_argument("--sync-period", type=int, default=4,
+                     help="stale mode: halo-exchange period in epochs "
+                          "(1 ≡ sync, 0 = never exchange ≡ local)")
+    run.add_argument("--integrate", default="none",
+                     choices=["none", "model_avg", "ensemble"],
+                     help="aggregate the k per-partition models before "
+                          "embedding assembly: model_avg parameter-averages "
+                          "(arxiv 2305.09887), ensemble averages embeddings")
     run.add_argument("--model", default="gcn", choices=["gcn", "sage"])
     run.add_argument("--use-kernel", action="store_true",
                      help="route neighbor aggregation through the Pallas "
@@ -101,7 +114,8 @@ def _cmd_run(args: argparse.Namespace) -> int:
         dataset_kwargs["scale"] = args.dataset_scale
     cfg = PipelineConfig(
         dataset=args.dataset, method=args.method, k=args.k, seed=args.seed,
-        scheme=args.scheme, mode=args.mode, model=args.model,
+        scheme=args.scheme, mode=args.mode, sync_period=args.sync_period,
+        integrate=args.integrate, model=args.model,
         use_kernel=args.use_kernel,
         hidden_dim=args.hidden_dim, embed_dim=args.embed_dim,
         num_layers=args.num_layers, dropout=args.dropout,

@@ -2,13 +2,16 @@
 
 Chains the paper's three stages behind one call:
 
-    dataset -> partition (cached) -> per-partition GNN training -> embedding
-    assembly -> MLP classifier eval
+    dataset -> partition (cached) -> per-partition GNN training -> model
+    integration -> embedding assembly -> MLP classifier eval
 
 and returns a single :class:`PipelineReport` carrying partition quality,
 collective bytes of the lowered train step, classification accuracy, and
 per-stage timings. Training mode is ``local`` (the paper's communication-free
-scheme) or ``sync`` (the DGL-style halo-exchange baseline).
+scheme), ``sync`` (the DGL-style halo-exchange baseline), or ``stale``
+(periodic halo exchange every ``sync_period`` epochs — the comm-vs-accuracy
+middle ground, DESIGN.md §12). ``integrate`` optionally parameter-averages
+(``model_avg``) or ensembles the k per-partition models before assembly.
 """
 from __future__ import annotations
 
@@ -17,8 +20,11 @@ import logging
 import time
 from typing import Any, Dict, Mapping, Optional
 
-from repro.core import NodeDataset, PartitionerSpec, evaluate_partition
-from repro.gnn import GNNConfig, train_classifier, train_local, train_sync
+from repro.core import (INTEGRATION_KINDS, NodeDataset, PartitionerSpec,
+                        evaluate_partition)
+from repro.gnn import (GNNConfig, stale_bytes_per_epoch,
+                       stale_exchange_epochs, train_classifier, train_local,
+                       train_stale, train_sync)
 
 from .artifacts import ArtifactBundle, PartitionArtifactStore, compute_bundle
 from .datasets import get_dataset
@@ -37,8 +43,12 @@ class PipelineConfig:
                                     # "leiden_fusion(resolution=0.5)"
     k: int = 8
     seed: int = 0
-    scheme: str = "repli"           # "inner" | "repli" (sync forces repli)
-    mode: str = "local"             # "local" | "sync"
+    scheme: str = "repli"           # "inner" | "repli" (sync/stale force repli)
+    mode: str = "local"             # "local" | "sync" | "stale"
+    sync_period: int = 4            # stale mode: exchange halos every N
+                                    # epochs (1 ≡ sync; 0 = never ≡ local)
+    integrate: str = "none"         # "none" | "model_avg" | "ensemble" —
+                                    # aggregate the k models pre-assembly
     model: str = "gcn"              # "gcn" | "sage"
     use_kernel: bool = False        # aggregate via the Pallas kernel
                                     # (DESIGN.md §3/§11); differentiable,
@@ -105,14 +115,28 @@ class PipelineReport:
                      f"n_pad={self.shapes['n_pad']} "
                      f"e_pad={self.shapes['e_pad']} [cache {bhit}]")
         agg = "pallas-kernel" if c.get("use_kernel") else "jnp"
-        lines.append(f"  training     mode={c['mode']} model={c['model']} "
+        mode = c["mode"]
+        if mode == "stale":
+            period = c.get("sync_period", 0)
+            mode = f"stale(period={period if period else '∞'})"
+        lines.append(f"  training     mode={mode} model={c['model']} "
                      f"layers={c['num_layers']} epochs={c['epochs']} "
                      f"aggregation={agg} devices={self.num_devices}")
+        if c.get("integrate", "none") != "none":
+            lines.append(f"  integration  {c['integrate']} over k={c['k']} "
+                         f"partition models (pre-assembly)")
         if self.collectives:
             lines.append(f"  collectives  {self.collectives['total']} "
                          f"bytes/step (all-gather="
                          f"{self.collectives['all-gather']}, all-reduce="
                          f"{self.collectives['all-reduce']})")
+            if c["mode"] == "stale":
+                lines.append(
+                    f"  stale comm   "
+                    f"{self.collectives.get('per_epoch_avg', 0)} bytes/epoch "
+                    f"avg ({self.collectives.get('n_exchange_epochs', 0)}/"
+                    f"{c['epochs']} exchange epochs, between-exchange step="
+                    f"{self.collectives.get('stale_step_total', 0)} bytes)")
         if self.accuracy:
             lines.append(f"  accuracy     train={self.accuracy['train']:.3f} "
                          f"val={self.accuracy['val']:.3f} "
@@ -153,8 +177,8 @@ class Pipeline:
         if mesh is None:
             mesh = make_local_mesh()
         data = int(mesh.shape["data"])
-        if self.config.mode == "sync":
-            return mesh          # train_sync validates data == k itself
+        if self.config.mode in ("sync", "stale"):
+            return mesh          # train_sync/train_stale validate data == k
         if k % data != 0:
             log.warning("k=%d not divisible by mesh data axis %d — "
                         "running unsharded", k, data)
@@ -165,17 +189,26 @@ class Pipeline:
     def run(self, ds: Optional[NodeDataset] = None) -> PipelineReport:
         import jax
         cfg = self.config
-        if cfg.mode not in ("local", "sync"):
-            raise ValueError(f"mode must be local|sync, got {cfg.mode!r}")
+        if cfg.mode not in ("local", "sync", "stale"):
+            raise ValueError(
+                f"mode must be local|sync|stale, got {cfg.mode!r}")
         if cfg.k < 1:
             raise ValueError(f"k must be >= 1, got {cfg.k}")
+        if cfg.sync_period < 0:
+            raise ValueError(
+                f"sync_period must be >= 0 (0 = never exchange), "
+                f"got {cfg.sync_period}")
+        if cfg.integrate not in INTEGRATION_KINDS:
+            raise ValueError(
+                f"integrate must be one of {INTEGRATION_KINDS}, "
+                f"got {cfg.integrate!r}")
         # resolve the partitioner spec up front: a bad method string fails
         # here, before any dataset/partition work happens
         spec = PartitionerSpec.parse(cfg.method)
         scheme = cfg.scheme
-        if cfg.mode == "sync" and scheme != "repli":
-            log.info("sync mode requires halo replicas — forcing "
-                     "scheme=repli (was %s)", scheme)
+        if cfg.mode in ("sync", "stale") and scheme != "repli":
+            log.info("%s mode requires halo replicas — forcing "
+                     "scheme=repli (was %s)", cfg.mode, scheme)
             scheme = "repli"
         timings: Dict[str, float] = {}
         t_all = time.time()
@@ -188,7 +221,7 @@ class Pipeline:
 
         # -- stage 2: partition + assembly (load-or-compute) -----------
         t0 = time.time()
-        need_halo = cfg.mode == "sync"
+        need_halo = cfg.mode in ("sync", "stale")
         if self.store is not None:
             bundle = self.store.load_or_compute(
                 ds.graph, spec, cfg.k, cfg.seed, scheme,
@@ -214,20 +247,43 @@ class Pipeline:
         if cfg.mode == "local":
             params, embeddings = train_local(
                 ds, bundle.batch, gnn_cfg, epochs=cfg.epochs, lr=cfg.lr,
-                seed=cfg.seed, mesh=mesh, hlo_out=hlo_out)
-        else:
+                seed=cfg.seed, mesh=mesh, hlo_out=hlo_out,
+                integrate=cfg.integrate)
+        elif cfg.mode == "sync":
             params, embeddings = train_sync(
                 ds, bundle.batch, bundle.halo, gnn_cfg, mesh,
                 epochs=cfg.epochs, lr=cfg.lr, seed=cfg.seed,
-                hlo_out=hlo_out)
+                hlo_out=hlo_out, integrate=cfg.integrate)
+        else:
+            params, embeddings = train_stale(
+                ds, bundle.batch, bundle.halo, gnn_cfg, mesh,
+                epochs=cfg.epochs, lr=cfg.lr, seed=cfg.seed,
+                sync_period=cfg.sync_period, hlo_out=hlo_out,
+                integrate=cfg.integrate)
         timings["train"] = time.time() - t0
 
         collectives: Dict[str, int] = {}
         if hlo_out:
             from repro.launch.hlo_analysis import collective_bytes
             collectives = collective_bytes(hlo_out["hlo"])
-            log.info("train-step collectives: %d bytes/step (mode=%s)",
-                     collectives["total"], cfg.mode)
+            # per-epoch average: what one training epoch actually moves.
+            # local: 0; sync: every epoch is an exchange; stale: only every
+            # sync_period-th epoch moves the exchange-step bytes.
+            if cfg.mode == "stale":
+                per_epoch = stale_bytes_per_epoch(
+                    collectives["total"], cfg.epochs, cfg.sync_period)
+                stale_hlo = hlo_out.get("hlo_stale")
+                collectives["stale_step_total"] = (
+                    collective_bytes(stale_hlo)["total"] if stale_hlo else 0)
+                collectives["n_exchange_epochs"] = len(
+                    stale_exchange_epochs(cfg.epochs, cfg.sync_period))
+                collectives["per_epoch_avg"] = int(round(
+                    sum(per_epoch) / max(cfg.epochs, 1)))
+            else:
+                collectives["per_epoch_avg"] = collectives["total"]
+            log.info("train-step collectives: %d bytes/step, %d bytes/epoch "
+                     "avg (mode=%s)", collectives["total"],
+                     collectives["per_epoch_avg"], cfg.mode)
 
         # -- stage 4: classifier on assembled embeddings ---------------
         accuracy: Dict[str, float] = {}

@@ -143,6 +143,38 @@ print("MAXDIFF:", float(jnp.abs(lj - lk).max()))
     assert maxdiff < 1e-4
 
 
+def test_stale_steps_consume_dropout_like_sync():
+    """The stale-mode steps thread the per-epoch dropout keys exactly like
+    the other modes: with dropout > 0 both the exchange and the
+    between-exchange (cached) step depend on the key and are deterministic
+    under it; with dropout == 0 the key is inert."""
+    out = run_with_devices(PREAMBLE + """
+import dataclasses
+from repro.gnn import make_stale_train_steps
+halo = build_halo_exchange(ds.graph, labels, batch)
+ka = jax.random.split(jax.random.PRNGKey(1), 4)
+kb = jax.random.split(jax.random.PRNGKey(2), 4)
+cfg_d = dataclasses.replace(cfg, dropout=0.5)
+steps = make_stale_train_steps(cfg_d, halo, False, mesh, lr=1e-2)
+_, _, la, caches = steps["exchange"](params, opt, tensors, ka)
+_, _, lb, _ = steps["exchange"](params, opt, tensors, kb)
+print("EX_KEY_MATTERS:", bool(jnp.abs(la - lb).max() > 1e-6))
+_, _, sa = steps["stale"](params, opt, tensors, ka, caches)
+_, _, sa2 = steps["stale"](params, opt, tensors, ka, caches)
+_, _, sb = steps["stale"](params, opt, tensors, kb, caches)
+print("ST_KEY_MATTERS:", bool(jnp.abs(sa - sb).max() > 1e-6))
+print("ST_DETERMINISTIC:", bool(jnp.abs(sa - sa2).max() == 0.0))
+steps0 = make_stale_train_steps(cfg, halo, False, mesh, lr=1e-2)
+_, _, za, c0 = steps0["exchange"](params, opt, tensors, ka)
+_, _, zb, _ = steps0["exchange"](params, opt, tensors, kb)
+print("INERT_AT_ZERO:", bool(jnp.abs(za - zb).max() == 0.0))
+""")
+    assert "EX_KEY_MATTERS: True" in out
+    assert "ST_KEY_MATTERS: True" in out
+    assert "ST_DETERMINISTIC: True" in out
+    assert "INERT_AT_ZERO: True" in out
+
+
 def test_local_matches_single_device_numerics():
     """Sharding over 4 devices must be bit-compatible (up to float noise)
     with the unsharded vmap execution."""

@@ -1,0 +1,330 @@
+"""stale(period=N) training mode + model integration (DESIGN.md §12).
+
+The mode is pinned by its two exact limits — stale(1) IS the sync baseline
+and stale(never) IS local training — plus the communication contract: the
+exchange step moves exactly the sync bytes and the between-exchange step
+lowers to ZERO collectives. Multi-device runtime tests run in a subprocess
+with 4 fake host devices (same convention as test_distributed_gnn);
+schedule/integration properties run in-process under hypothesis.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (INTEGRATION_KINDS, average_partition_params,
+                        integrate_models)
+from repro.gnn import (apply_integration, stale_bytes_per_epoch,
+                       stale_exchange_epochs)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+PREAMBLE = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (make_arxiv_like, leiden_fusion, build_partition_batch,
+                        build_halo_exchange)
+from repro.gnn import GNNConfig, train_local, train_stale, train_sync
+
+ds = make_arxiv_like(n=400, feature_dim=8, num_classes=4, seed=3)
+labels = leiden_fusion(ds.graph, 4, alpha=0.3)
+batch = build_partition_batch(ds.graph, labels, scheme="repli")
+halo = build_halo_exchange(ds.graph, labels, batch)
+cfg = GNNConfig(kind="gcn", feature_dim=8, hidden_dim=16, embed_dim=16,
+                num_layers=2, dropout=0.0)
+mesh = jax.make_mesh((4,), ("data",))
+
+def maxdiff(a, b):
+    pa, pb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return max(float(jnp.abs(x - y).max()) for x, y in zip(pa, pb))
+"""
+
+
+# ---------------------------------------------------------------------------
+# the two exact limits, jnp aggregation path
+# ---------------------------------------------------------------------------
+def test_stale_period1_matches_sync():
+    """sync_period=1 exchanges every epoch — it IS train_sync, parameter for
+    parameter and embedding for embedding."""
+    out = run_with_devices(PREAMBLE + """
+p_sync, emb_sync = train_sync(ds, batch, halo, cfg, mesh, epochs=5, seed=0)
+p_st, emb_st = train_stale(ds, batch, halo, cfg, mesh, epochs=5, seed=0,
+                           sync_period=1)
+print("PARAMS_MAXDIFF:", maxdiff(p_sync, p_st))
+print("EMB_MAXDIFF:", float(np.abs(emb_sync - emb_st).max()))
+""")
+    assert float(out.split("PARAMS_MAXDIFF:")[1].split()[0]) == 0.0
+    assert float(out.split("EMB_MAXDIFF:")[1].split()[0]) == 0.0
+
+
+def test_stale_never_exchange_matches_local():
+    """sync_period=0 never exchanges: stale training must reproduce
+    train_local exactly — including through dropout, which exercises the
+    shared per-epoch key schedule."""
+    out = run_with_devices(PREAMBLE + """
+import dataclasses
+cfg_d = dataclasses.replace(cfg, dropout=0.3)
+p_loc, emb_loc = train_local(ds, batch, cfg_d, epochs=5, seed=0, mesh=None)
+p_st, emb_st = train_stale(ds, batch, halo, cfg_d, mesh, epochs=5, seed=0,
+                           sync_period=0)
+print("PARAMS_MAXDIFF:", maxdiff(p_loc, p_st))
+print("EMB_MAXDIFF:", float(np.abs(emb_loc - emb_st).max()))
+""")
+    assert float(out.split("PARAMS_MAXDIFF:")[1].split()[0]) < 1e-6
+    assert float(out.split("EMB_MAXDIFF:")[1].split()[0]) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# the same limits through the Pallas aggregation kernel
+# ---------------------------------------------------------------------------
+def test_stale_period1_matches_sync_with_kernel():
+    out = run_with_devices(PREAMBLE + """
+import dataclasses
+cfg_k = dataclasses.replace(cfg, use_kernel=True)
+p_sync, emb_sync = train_sync(ds, batch, halo, cfg_k, mesh, epochs=3, seed=0)
+p_st, emb_st = train_stale(ds, batch, halo, cfg_k, mesh, epochs=3, seed=0,
+                           sync_period=1)
+print("PARAMS_MAXDIFF:", maxdiff(p_sync, p_st))
+print("EMB_MAXDIFF:", float(np.abs(emb_sync - emb_st).max()))
+""")
+    assert float(out.split("PARAMS_MAXDIFF:")[1].split()[0]) < 1e-5
+    assert float(out.split("EMB_MAXDIFF:")[1].split()[0]) < 1e-5
+
+
+def test_stale_never_exchange_matches_local_with_kernel():
+    out = run_with_devices(PREAMBLE + """
+import dataclasses
+cfg_k = dataclasses.replace(cfg, use_kernel=True)
+p_loc, emb_loc = train_local(ds, batch, cfg_k, epochs=3, seed=0, mesh=None)
+p_st, emb_st = train_stale(ds, batch, halo, cfg_k, mesh, epochs=3, seed=0,
+                           sync_period=0)
+print("PARAMS_MAXDIFF:", maxdiff(p_loc, p_st))
+print("EMB_MAXDIFF:", float(np.abs(emb_loc - emb_st).max()))
+""")
+    assert float(out.split("PARAMS_MAXDIFF:")[1].split()[0]) < 1e-5
+    assert float(out.split("EMB_MAXDIFF:")[1].split()[0]) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# the communication contract
+# ---------------------------------------------------------------------------
+def test_stale_exchange_bytes_match_sync_and_stale_step_is_collective_free():
+    """The exchange step moves exactly the sync bytes; the between-exchange
+    step lowers to an HLO with zero collective bytes."""
+    out = run_with_devices(PREAMBLE + """
+from repro.launch.hlo_analysis import collective_bytes
+hlo_sync, hlo_st = {}, {}
+train_sync(ds, batch, halo, cfg, mesh, epochs=2, seed=0, hlo_out=hlo_sync)
+train_stale(ds, batch, halo, cfg, mesh, epochs=4, seed=0, sync_period=2,
+            hlo_out=hlo_st)
+b_sync = collective_bytes(hlo_sync["hlo"])["total"]
+b_ex = collective_bytes(hlo_st["hlo"])["total"]
+b_between = collective_bytes(hlo_st["hlo_stale"])["total"]
+print("SYNC_BYTES:", b_sync)
+print("EXCHANGE_MATCHES:", b_ex == b_sync and b_sync > 0)
+print("BETWEEN_BYTES:", b_between)
+""")
+    assert "EXCHANGE_MATCHES: True" in out
+    assert int(out.split("BETWEEN_BYTES:")[1].split()[0]) == 0
+
+
+def test_stale_pipeline_records_schedule_and_is_deterministic():
+    """End to end through the Pipeline: the report carries sync_period, the
+    per-epoch average sits strictly below the per-step bytes, the stale step
+    is collective-free — and two identical runs emit identical reports."""
+    out = run_with_devices("""
+import json
+from repro.pipeline import Pipeline, PipelineConfig
+
+def run_once():
+    cfg = PipelineConfig(dataset="karate", method="leiden_fusion", k=4,
+                         seed=0, scheme="repli", mode="stale", sync_period=3,
+                         integrate="model_avg", hidden_dim=16, embed_dim=16,
+                         num_layers=2, dropout=0.0, epochs=6,
+                         classifier_epochs=20, cache_dir=None)
+    return Pipeline(cfg).run()
+
+ra, rb = run_once(), run_once()
+da, db = ra.as_dict(), rb.as_dict()
+print("SYNC_PERIOD:", da["config"]["sync_period"])
+print("INTEGRATE:", da["config"]["integrate"])
+c = ra.collectives
+print("AVG_BELOW_STEP:", 0 < c["per_epoch_avg"] < c["total"])
+print("STALE_STEP_BYTES:", c["stale_step_total"])
+print("N_EXCHANGE:", c["n_exchange_epochs"])
+same = (da["accuracy"] == db["accuracy"] and
+        da["collectives"] == db["collectives"])
+print("DETERMINISTIC:", same)
+print("SUMMARY_HAS_MODE:", "mode=stale(period=3)" in ra.summary())
+""")
+    assert "SYNC_PERIOD: 3" in out
+    assert "INTEGRATE: model_avg" in out
+    assert "AVG_BELOW_STEP: True" in out
+    assert int(out.split("STALE_STEP_BYTES:")[1].split()[0]) == 0
+    assert int(out.split("N_EXCHANGE:")[1].split()[0]) == 2
+    assert "DETERMINISTIC: True" in out
+    assert "SUMMARY_HAS_MODE: True" in out
+
+
+# ---------------------------------------------------------------------------
+# exchange schedule — in-process, pure python
+# ---------------------------------------------------------------------------
+def test_exchange_epochs_period1_is_every_epoch():
+    assert stale_exchange_epochs(5, 1) == [0, 1, 2, 3, 4]
+
+
+def test_exchange_epochs_never_and_oversized_period():
+    assert stale_exchange_epochs(5, 0) == []
+    assert stale_exchange_epochs(5, None) == []
+    # a period longer than training still exchanges once, at epoch 0
+    assert stale_exchange_epochs(5, 100) == [0]
+
+
+def test_bytes_per_epoch_example():
+    assert stale_bytes_per_epoch(10, 6, 2) == [10, 0, 10, 0, 10, 0]
+    assert stale_bytes_per_epoch(10, 4, 0) == [0, 0, 0, 0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(epochs=st.integers(min_value=1, max_value=40),
+       period=st.integers(min_value=0, max_value=8),
+       nbytes=st.integers(min_value=1, max_value=10**9))
+def test_bytes_per_epoch_zero_exactly_off_schedule(epochs, period, nbytes):
+    """Collective bytes are exactly 0 between exchange epochs and exactly
+    the exchange bytes on them."""
+    per = stale_bytes_per_epoch(nbytes, epochs, period)
+    on = set(stale_exchange_epochs(epochs, period))
+    assert len(per) == epochs
+    for e, b in enumerate(per):
+        assert b == (nbytes if e in on else 0)
+    if period >= 1:
+        assert 0 in on              # epoch 0 always exchanges
+
+
+@settings(max_examples=30, deadline=None)
+@given(epochs=st.integers(min_value=1, max_value=40),
+       nbytes=st.integers(min_value=1, max_value=10**9))
+def test_bytes_per_epoch_monotone_in_period(epochs, nbytes):
+    """Total (and so average) collective bytes are monotone non-increasing
+    as the period grows, from the sync pole down to local's zero."""
+    totals = [sum(stale_bytes_per_epoch(nbytes, epochs, p))
+              for p in range(1, epochs + 2)]
+    assert all(a >= b for a, b in zip(totals, totals[1:]))
+    assert totals[0] == nbytes * epochs                  # period=1 == sync
+    assert sum(stale_bytes_per_epoch(nbytes, epochs, 0)) == 0   # local pole
+
+
+# ---------------------------------------------------------------------------
+# model integration — in-process
+# ---------------------------------------------------------------------------
+def _stacked_params(k: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(k, 5, 3)).astype(np.float32),
+            "layers": [{"b": rng.normal(size=(k, 7)).astype(np.float32)}]}
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(min_value=2, max_value=4),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_model_avg_of_identical_models_is_fixed_point(k, seed):
+    import jax
+    rng = np.random.default_rng(seed)
+    one = {"w": rng.normal(size=(1, 5, 3)).astype(np.float32)}
+    params = jax.tree.map(lambda x: np.broadcast_to(x, (k,) + x.shape[1:]),
+                          one)
+    avg = average_partition_params(params)
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_model_avg_is_mean_and_keeps_shape():
+    import jax
+    params = _stacked_params(3, seed=7)
+    avg = average_partition_params(params)
+    for a, x in zip(jax.tree.leaves(avg), jax.tree.leaves(params)):
+        a, x = np.asarray(a), np.asarray(x)
+        assert a.shape == x.shape
+        expect = x.mean(axis=0)
+        for row in a:
+            np.testing.assert_allclose(row, expect, atol=1e-6)
+
+
+def test_model_avg_weighted_selects_row():
+    import jax
+    params = _stacked_params(3, seed=11)
+    picked = average_partition_params(params, weights=np.array([0., 1., 0.]))
+    for a, x in zip(jax.tree.leaves(picked), jax.tree.leaves(params)):
+        a, x = np.asarray(a), np.asarray(x)
+        for row in a:
+            np.testing.assert_allclose(row, x[1], atol=1e-6)
+
+
+def test_integrate_models_validates_kind():
+    params = _stacked_params(2, seed=0)
+    with pytest.raises(ValueError, match="integration kind"):
+        integrate_models(params, kind="bogus")
+    with pytest.raises(ValueError, match="prediction-level"):
+        integrate_models(params, kind="ensemble")
+    assert integrate_models(params, kind="none") is params
+    assert "none" in INTEGRATION_KINDS and "model_avg" in INTEGRATION_KINDS
+
+
+def test_apply_integration_ensemble_of_identical_models_matches_single():
+    """Prediction-level ensembling of k identical models must equal any
+    single model's embeddings — and model_avg must agree too."""
+    import jax
+    import jax.numpy as jnp
+    k = 3
+    one = np.random.default_rng(5).normal(size=(1, 4, 4)).astype(np.float32)
+    params = {"w": jnp.asarray(np.broadcast_to(one, (k, 4, 4)))}
+    emb_fn = lambda p: np.asarray(p["w"]).reshape(k, -1) * 2.0
+    base = emb_fn(params)
+    for kind in ("ensemble", "model_avg", "none"):
+        p2, emb = apply_integration(params, kind, emb_fn, k)
+        np.testing.assert_allclose(emb, base, atol=1e-5)
+    with pytest.raises(ValueError):
+        apply_integration(params, "bogus", emb_fn, k)
+
+
+def test_pipeline_rejects_bad_integrate_and_period():
+    from repro.pipeline import Pipeline, PipelineConfig
+    with pytest.raises(ValueError, match="integrat"):
+        Pipeline(PipelineConfig(dataset="karate", k=2, integrate="bogus",
+                                epochs=1, classifier_epochs=0)).run()
+    with pytest.raises(ValueError, match="sync_period"):
+        Pipeline(PipelineConfig(dataset="karate", k=2, mode="stale",
+                                sync_period=-1, epochs=1,
+                                classifier_epochs=0)).run()
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=3))
+def test_pipeline_report_deterministic_for_fixed_seed(seed):
+    """Same config + seed -> byte-identical accuracy and collectives
+    (single-device mode=local run; the stale-mode determinism twin runs in
+    the subprocess test above)."""
+    from repro.pipeline import Pipeline, PipelineConfig
+    cfg = PipelineConfig(dataset="karate", method="leiden_fusion", k=2,
+                         seed=seed, mode="local", hidden_dim=8, embed_dim=8,
+                         num_layers=2, epochs=2, classifier_epochs=5,
+                         cache_dir=None, collect_hlo=False)
+    ra = Pipeline(cfg).run().as_dict()
+    rb = Pipeline(cfg).run().as_dict()
+    assert ra["accuracy"] == rb["accuracy"]
+    assert ra["collectives"] == rb["collectives"]
