@@ -22,8 +22,12 @@ frontier ordering: stale(4) moves strictly fewer bytes per epoch than sync
 (and more than local's zero), at test accuracy no worse than local.
 
 Every run appends its rows to ``benchmarks/artifacts/BENCH_frontier.json``
-(mode, period, bytes, accuracy, wall seconds, timestamp) — the frontier
-trajectory across commits, same pattern as BENCH_training_time.json.
+(partitioner spec, mode, period, bytes, accuracy, wall seconds, timestamp) —
+the frontier trajectory across commits, same pattern as
+BENCH_training_time.json. ``--spec`` sweeps the same grid under any
+registered partitioner (``--spec metis``, ``--spec "lpa+f(alpha=0.1)"``);
+the canonical spec is recorded in every row so trajectories under different
+partitioners stay distinguishable.
 """
 import argparse
 
@@ -35,10 +39,11 @@ PERIODS = (1, 2, 4, 8, 16)
 
 
 def _run_point(ds, mode: str, period: int | None, k: int, epochs: int,
-               classifier_epochs: int, hidden: int):
+               classifier_epochs: int, hidden: int,
+               spec: str = "leiden_fusion"):
     from repro.pipeline import Pipeline, PipelineConfig
     cfg = PipelineConfig(
-        method="leiden_fusion", k=k, seed=0, scheme="repli",
+        method=spec, k=k, seed=0, scheme="repli",
         mode=mode, sync_period=period if period is not None else 0,
         model="gcn", hidden_dim=hidden, embed_dim=hidden, num_layers=2,
         dropout=0.0, epochs=epochs, lr=1e-2,
@@ -46,6 +51,7 @@ def _run_point(ds, mode: str, period: int | None, k: int, epochs: int,
     report = Pipeline(cfg, store=partition_store()).run(ds)
     coll = report.collectives
     return {
+        "spec": report.config["method"],   # canonical partitioner spec
         "mode": mode,
         "period": period if mode == "stale" else None,
         "k": k, "epochs": epochs,
@@ -59,7 +65,7 @@ def _run_point(ds, mode: str, period: int | None, k: int, epochs: int,
     }
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, spec: str = "leiden_fusion"):
     from .common import arxiv_like
     k = 4
     if smoke:
@@ -71,7 +77,8 @@ def run(smoke: bool = False):
         grid = ([("local", None)] + [("stale", p) for p in PERIODS]
                 + [("sync", None)])
         epochs, classifier_epochs, hidden = 16, 80, 32
-    rows = [_run_point(ds, mode, period, k, epochs, classifier_epochs, hidden)
+    rows = [_run_point(ds, mode, period, k, epochs, classifier_epochs,
+                       hidden, spec=spec)
             for mode, period in grid]
     emit("frontier", rows)
     append_bench_json(BENCH_JSON, rows)
@@ -111,8 +118,13 @@ def main() -> None:
                     "local <- stale(period=N) -> sync")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: {local, stale(4), sync} + frontier asserts")
+    ap.add_argument("--spec", default="leiden_fusion",
+                    help="partitioner spec to sweep (DESIGN.md §9), e.g. "
+                         "metis | \"lpa+f(alpha=0.1)\" | "
+                         "\"leiden_fusion(resolution=0.5)\"; recorded in "
+                         "every BENCH_frontier.json row")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, spec=args.spec)
 
 
 if __name__ == "__main__":

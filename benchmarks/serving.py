@@ -1,0 +1,123 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+# Must run before jax is first imported (the export pipeline trains k=4
+# partitions on the mesh data axis), so this module is standalone — it is
+# deliberately NOT in the benchmarks.run registry, where jax is already up.
+"""Serving benchmark: the online half of the pipeline (DESIGN.md §13).
+
+Exports (or reuses) a 4-partition ``make_arxiv_like`` serving bundle via the
+pipeline, replays a Zipf-shaped query stream — including unseen-node queries
+answered by the inductive fallback — through the continuous batcher, and
+appends one row per configuration to
+``benchmarks/artifacts/BENCH_serving.json``:
+
+    throughput_qps, p50_ms, p99_ms, cache_hit_rate,
+    warm_compiles, steady_state_recompiles, served_by_source
+
+    PYTHONPATH=src python -m benchmarks.serving            # full replay
+    PYTHONPATH=src python -m benchmarks.serving --smoke    # CI gate
+
+``--smoke`` asserts the serving contracts:
+
+* every served label for a known node equals the offline answer key
+  (``run_replay(verify=True)`` hard-fails otherwise);
+* ``steady_state_recompiles == 0`` — after warmup, no flush may introduce
+  a new device shape (measured from the jit caches, not assumed);
+* ``cache_hit_rate > 0`` on the Zipf replay — the hot set must actually
+  hit the LRU cache;
+* p99 latency under a deliberately generous bound (regression tripwire,
+  not a performance target).
+"""
+import argparse
+import tempfile
+
+from .common import ARTIFACTS, append_bench_json, partition_store
+
+BENCH_JSON = os.path.join(ARTIFACTS, "BENCH_serving.json")
+
+# Generous CI tripwire: a p99 above this on a 64-query flush means serving
+# fell off a cliff (e.g. per-query dispatch or steady-state recompiles),
+# not that a shared runner was slow.
+SMOKE_P99_BOUND_MS = 2000.0
+
+
+def _export_bundle(n: int, k: int, epochs: int, classifier_epochs: int,
+                   hidden: int, serving_dir: str):
+    from .common import arxiv_like
+    from repro.pipeline import Pipeline, PipelineConfig
+    ds = arxiv_like(n=n)
+    cfg = PipelineConfig(
+        method="leiden_fusion", k=k, seed=0, mode="local", model="gcn",
+        hidden_dim=hidden, embed_dim=hidden, num_layers=2, dropout=0.0,
+        epochs=epochs, lr=1e-2, classifier_epochs=classifier_epochs,
+        collect_hlo=False, serving_dir=serving_dir)
+    report = Pipeline(cfg, store=partition_store()).run(ds)
+    return report
+
+
+def run(smoke: bool = False):
+    from repro.serving import (ContinuousBatcher, EmbeddingStore,
+                               LruNodeCache, make_zipf_workload, run_replay)
+    if smoke:
+        n, epochs, classifier_epochs, hidden = 600, 10, 40, 16
+        num_queries, cache_capacity = 2000, 256
+    else:
+        n, epochs, classifier_epochs, hidden = 2000, 20, 80, 32
+        num_queries, cache_capacity = 10_000, 512
+
+    with tempfile.TemporaryDirectory(prefix="repro-serving-bench-") as tmp:
+        report = _export_bundle(n, 4, epochs, classifier_epochs, hidden, tmp)
+        store = EmbeddingStore.load(
+            report.serving_path,
+            expect_fingerprint=report.partition_fingerprint)
+        batcher = ContinuousBatcher(store, cache=LruNodeCache(cache_capacity),
+                                    max_batch=64, max_wait_ms=2.0)
+        workload = make_zipf_workload(store.n, num_queries=num_queries,
+                                      alpha=1.1, unseen_frac=0.02, seed=0)
+        row = run_replay(batcher, workload, verify=True)
+    row["dataset_n"] = n
+    row["test_acc"] = round(report.accuracy.get("test", 0.0), 4)
+    append_bench_json(BENCH_JSON, [row])
+
+    if smoke:
+        assert row["label_mismatches"] == 0, (
+            f"served labels must match the offline answer key exactly, "
+            f"got {row['label_mismatches']} mismatches")
+        assert row["steady_state_recompiles"] == 0, (
+            f"steady state must never recompile (warmup covers every pow2 "
+            f"bucket), got {row['steady_state_recompiles']}")
+        assert row["cache_hit_rate"] > 0, (
+            "the Zipf hot set must hit the LRU cache, got hit_rate=0")
+        assert row["p99_ms"] <= SMOKE_P99_BOUND_MS, (
+            f"p99 latency {row['p99_ms']}ms blew the {SMOKE_P99_BOUND_MS}ms "
+            f"tripwire — serving regressed structurally")
+        srcs = row["served_by_source"]
+        assert srcs.get("inductive", 0) > 0 and srcs.get("degraded", 0) > 0, (
+            f"the replay must exercise the inductive AND degraded paths, "
+            f"got {srcs}")
+        print(f"# serving smoke OK: {row['throughput_qps']} qps, "
+              f"p50={row['p50_ms']}ms p99={row['p99_ms']}ms, "
+              f"hit_rate={row['cache_hit_rate']}, "
+              f"steady_recompiles=0, exact-match {row['queries']}/"
+              f"{row['queries']}")
+    else:
+        print(f"# serving: {row['throughput_qps']} qps over "
+              f"{row['queries']} queries, p50={row['p50_ms']}ms "
+              f"p99={row['p99_ms']}ms, hit_rate={row['cache_hit_rate']}, "
+              f"sources={row['served_by_source']}")
+    return [row]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="partition-sharded serving: Zipf replay through the "
+                    "continuous batcher")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: exact-match + zero steady-state "
+                         "recompiles + cache hit rate + p99 tripwire")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 """GNN substrate: GCN/GraphSAGE models + the paper's training pipeline."""
-from .model import GNNConfig, gnn_forward, init_gnn, init_mlp, mlp_forward
+from .model import (GNNConfig, gnn_forward, head_logits, init_gnn, init_mlp,
+                    mlp_forward)
 from .train import (PartitionTensors, apply_integration,
                     gather_partition_tensors,
                     init_partition_models, make_halo_forward,
@@ -10,7 +11,8 @@ from .train import (PartitionTensors, apply_integration,
                     train_sync, train_classifier, compute_embeddings,
                     pool_embeddings, mean_rocauc)
 
-__all__ = ["GNNConfig", "gnn_forward", "init_gnn", "init_mlp", "mlp_forward",
+__all__ = ["GNNConfig", "gnn_forward", "head_logits", "init_gnn", "init_mlp",
+           "mlp_forward",
            "PartitionTensors", "apply_integration",
            "gather_partition_tensors",
            "init_partition_models", "make_halo_forward",

@@ -58,6 +58,15 @@ def gnn_forward(params: PyTree, cfg: GNNConfig, features: jnp.ndarray,
     return h
 
 
+def head_logits(head: PyTree, emb: jnp.ndarray) -> jnp.ndarray:
+    """Per-partition linear head on embeddings: ``emb @ w + b``.
+
+    The single-node inference entry the serving layer shares with training
+    (`_forward_one`, `make_halo_forward`): ``head`` is one partition's
+    ``{"w": [E, C], "b": [C]}`` slice of the stacked params."""
+    return emb @ head["w"] + head["b"]
+
+
 # ---------------------------------------------------------------------------
 # MLP classifier on pooled embeddings
 # ---------------------------------------------------------------------------

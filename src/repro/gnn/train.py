@@ -38,8 +38,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import NodeDataset, PartitionBatch, HaloExchangeSpec
 from repro.optim import OptState, adamw_init, adamw_update
-from .model import (GNNConfig, gnn_forward, init_gnn, init_mlp, mlp_forward,
-                    sigmoid_bce, softmax_xent)
+from .model import (GNNConfig, gnn_forward, head_logits, init_gnn, init_mlp,
+                    mlp_forward, sigmoid_bce, softmax_xent)
 
 PyTree = Any
 
@@ -106,8 +106,7 @@ def _forward_one(params, cfg: GNNConfig, t: Dict[str, jnp.ndarray],
     emb = gnn_forward(params["body"], cfg, feats, t["edge_src"],
                       t["edge_dst"], t["edge_weight"], t["in_degree"],
                       node_mask=t["node_mask"], dropout_key=dropout_key)
-    logits = emb @ params["head"]["w"] + params["head"]["b"]
-    return emb, logits
+    return emb, head_logits(params["head"], emb)
 
 
 def _loss_one(params, cfg: GNNConfig, t, multilabel: bool, dropout_key):
@@ -320,7 +319,7 @@ def make_halo_forward(cfg: GNNConfig, halo: HaloExchangeSpec,
                 dropout_key, sub = jax.random.split(dropout_key)
                 keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h.shape)
                 h = jnp.where(keep, h / (1 - cfg.dropout), 0.0)
-        logits = h @ params["head"]["w"] + params["head"]["b"]
+        logits = head_logits(params["head"], h)
         caches_out = tuple(new_caches) if refresh_mode == "exchange" else None
         return h, logits, caches_out
     return forward
@@ -636,8 +635,12 @@ def train_stale(ds: NodeDataset, batch: PartitionBatch,
 # ---------------------------------------------------------------------------
 def train_classifier(ds: NodeDataset, embeddings: np.ndarray,
                      hidden: int = 256, epochs: int = 150, lr: float = 1e-2,
-                     seed: int = 0) -> Dict[str, float]:
-    """Train the MLP on frozen pooled embeddings; report accuracy/ROC-AUC."""
+                     seed: int = 0, return_params: bool = False):
+    """Train the MLP on frozen pooled embeddings; report accuracy/ROC-AUC.
+
+    With ``return_params=True`` returns ``(metrics, params)`` — the trained
+    MLP pytree the serving bundle exports so online answers reproduce the
+    offline evaluation exactly (DESIGN.md §13)."""
     key = jax.random.PRNGKey(seed)
     params = init_mlp(key, embeddings.shape[1], hidden, ds.num_classes)
     opt = adamw_init(params)
@@ -669,6 +672,8 @@ def train_classifier(ds: NodeDataset, embeddings: np.ndarray,
         else:
             pred = logits[mask].argmax(-1)
             out[split] = float((pred == ds.labels[mask]).mean())
+    if return_params:
+        return out, params
     return out
 
 

@@ -1,8 +1,15 @@
-"""Serving driver: batched prefill -> decode loop for any --arch.
+"""Serving driver: bucketed prefill -> decode loop for any --arch.
 
-A minimal but real continuous-batching loop: requests with different prompt
-lengths share one padded prefill, then decode in lock-step with per-request
-lengths; finished requests (EOS or max tokens) exit the batch.
+A minimal but real continuous-batching loop: requests are grouped into
+power-of-two prompt-length buckets, each bucket shares one padded prefill
+and decodes in lock-step with per-request lengths; finished requests (EOS
+or max tokens) exit the batch.
+
+Bucketing replaces the old single shared prefill padded to the global max
+prompt length: one 8-token request in a batch with one 512-token request no
+longer pays a 512-wide prefill, and each bucket shape compiles exactly once
+(counted in the output as ``prefill_compiles``/``decode_compiles`` — the
+same measured-not-assumed discipline as ``repro.serving``'s CompileLog).
 
     PYTHONPATH=src python -m repro.launch.serve --arch xlstm_125m --reduced \
         --requests 4 --max-new 16
@@ -17,6 +24,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+MIN_PREFILL_BUCKET = 8
+
+
+def prefill_bucket(length: int) -> int:
+    """Smallest power-of-two >= length (floored at MIN_PREFILL_BUCKET)."""
+    b = MIN_PREFILL_BUCKET
+    while b < length:
+        b *= 2
+    return b
+
+
+def _compiles(fn) -> int:
+    try:
+        return fn._cache_size()
+    except AttributeError:
+        return -1          # private jit API unavailable: report unknown
+
 
 def serve(args) -> dict:
     from repro.configs import get_config
@@ -29,52 +53,66 @@ def serve(args) -> dict:
     rng = np.random.default_rng(args.seed)
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
 
-    # synthetic request batch with ragged prompt lengths, left-padded to max
+    # synthetic request batch with ragged prompt lengths
     lengths = rng.integers(args.min_prompt, args.max_prompt + 1,
                            args.requests)
-    s_max = int(lengths.max())
-    tokens = rng.integers(1, cfg.vocab_size, (args.requests, s_max))
-    batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
-    if cfg.frontend == "vision":
-        batch["patch_embeds"] = jnp.asarray(
-            rng.normal(0, 0.02, (args.requests, cfg.num_patch_tokens,
-                                 cfg.d_model)), jnp.dtype(cfg.dtype))
-    if cfg.frontend == "audio":
-        batch["frames"] = jnp.asarray(
-            rng.normal(0, 0.02, (args.requests, max(8, s_max // 8),
-                                 cfg.d_model)), jnp.dtype(cfg.dtype))
+    buckets = np.array([prefill_bucket(int(s)) for s in lengths])
 
     prefill = jax.jit(lambda p, b: prefill_step(p, cfg, b))
     decode = jax.jit(lambda p, t, c, l: serve_step(p, cfg, t, c, l))
 
-    t0 = time.time()
-    logits, cache, cache_len = prefill(params, batch)
-    cache = grow_cache(cache, s_max + args.max_new)
-    # NOTE: shared prefill pads every request to s_max; per-request lengths
-    # start at the individual prompt length for correct masking.
-    cur_len = jnp.asarray(lengths, jnp.int32)
-    t_prefill = time.time() - t0
+    gen = np.zeros((args.requests, args.max_new), dtype=np.int64)
+    finite = True
+    t_prefill = t_decode = 0.0
+    bucket_counts: dict = {}
+    # one padded prefill + lock-step decode per bucket: a fixed [g, s_b]
+    # shape per group, so each bucket compiles once and a re-run with the
+    # same bucket mix compiles nothing
+    for s_b in sorted(set(buckets.tolist())):
+        idx = np.where(buckets == s_b)[0]
+        bucket_counts[int(s_b)] = int(idx.size)
+        tokens = rng.integers(1, cfg.vocab_size, (idx.size, s_b))
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = jnp.asarray(
+                rng.normal(0, 0.02, (idx.size, cfg.num_patch_tokens,
+                                     cfg.d_model)), jnp.dtype(cfg.dtype))
+        if cfg.frontend == "audio":
+            batch["frames"] = jnp.asarray(
+                rng.normal(0, 0.02, (idx.size, max(8, s_b // 8),
+                                     cfg.d_model)), jnp.dtype(cfg.dtype))
 
-    out_tokens = []
-    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    t1 = time.time()
-    for step_i in range(args.max_new):
-        out_tokens.append(np.asarray(next_tok[:, 0]))
-        logits, cache = decode(params, next_tok, cache, cur_len)
-        cur_len = cur_len + 1
+        t0 = time.time()
+        logits, cache, cache_len = prefill(params, batch)
+        cache = grow_cache(cache, s_b + args.max_new)
+        # per-request lengths start at the individual prompt length for
+        # correct masking inside the bucket's shared padded prefill
+        cur_len = jnp.asarray(lengths[idx], jnp.int32)
+        t_prefill += time.time() - t0
+
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    t_decode = time.time() - t1
+        t1 = time.time()
+        for step_i in range(args.max_new):
+            gen[idx, step_i] = np.asarray(next_tok[:, 0])
+            logits, cache = decode(params, next_tok, cache, cur_len)
+            cur_len = cur_len + 1
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        t_decode += time.time() - t1
+        finite = finite and bool(np.isfinite(np.asarray(logits)).all())
 
-    gen = np.stack(out_tokens, 1)
     return {
         "arch": cfg.name, "requests": args.requests,
         "prompt_lengths": lengths.tolist(),
+        "prefill_buckets": {str(k): v
+                            for k, v in sorted(bucket_counts.items())},
+        "prefill_compiles": _compiles(prefill),
+        "decode_compiles": _compiles(decode),
         "new_tokens": args.max_new,
         "prefill_s": round(t_prefill, 2),
         "decode_s": round(t_decode, 2),
         "decode_tok_per_s": round(args.requests * args.max_new /
                                   max(t_decode, 1e-9), 1),
-        "finite": bool(np.isfinite(np.asarray(logits)).all()),
+        "finite": finite,
         "sample_generation": gen[0, :8].tolist(),
     }
 

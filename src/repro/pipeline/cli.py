@@ -85,6 +85,10 @@ def _build_parser() -> argparse.ArgumentParser:
                      help="disable the partition artifact cache")
     run.add_argument("--checkpoint-dir", default=None,
                      help="save trained per-partition params here")
+    run.add_argument("--serving-dir", default=None,
+                     help="export a repro.serving bundle here (embeddings + "
+                          "per-partition heads + classifier + offline "
+                          "answer key; requires --classifier-epochs > 0)")
     run.add_argument("--no-hlo", action="store_true",
                      help="skip lowering the train step for the "
                           "collective-bytes report (saves one compile)")
@@ -123,6 +127,7 @@ def _cmd_run(args: argparse.Namespace) -> int:
         classifier_epochs=args.classifier_epochs,
         cache_dir=None if args.no_cache else args.cache_dir,
         checkpoint_dir=args.checkpoint_dir,
+        serving_dir=args.serving_dir,
         collect_hlo=not args.no_hlo,
         dataset_kwargs=dataset_kwargs)
     report = Pipeline(cfg).run()

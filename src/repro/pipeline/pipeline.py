@@ -63,6 +63,9 @@ class PipelineConfig:
     classifier_hidden: int = 256
     cache_dir: Optional[str] = None     # None disables the artifact cache
     checkpoint_dir: Optional[str] = None
+    serving_dir: Optional[str] = None   # export a serving bundle here
+                                        # (repro.serving, DESIGN.md §13);
+                                        # requires the classifier stage
     collect_hlo: bool = True        # lower+compile once to count collectives
     shard_data_axis: bool = True    # local mode: shard k over the mesh
                                     # `data` axis; False forces unsharded
@@ -90,6 +93,7 @@ class PipelineReport:
     timings: Dict[str, float]
     checkpoint_path: Optional[str] = None
     partition_fingerprint: Optional[str] = None   # spec config fingerprint
+    serving_path: Optional[str] = None            # exported serving bundle
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -143,6 +147,8 @@ class PipelineReport:
                          f"test={self.accuracy['test']:.3f}")
         if self.checkpoint_path:
             lines.append(f"  checkpoint   {self.checkpoint_path}")
+        if self.serving_path:
+            lines.append(f"  serving      {self.serving_path}")
         t = self.timings
         lines.append("  timings      " + " ".join(
             f"{k}={v:.2f}s" for k, v in t.items()))
@@ -202,6 +208,11 @@ class Pipeline:
             raise ValueError(
                 f"integrate must be one of {INTEGRATION_KINDS}, "
                 f"got {cfg.integrate!r}")
+        if cfg.serving_dir and cfg.classifier_epochs <= 0:
+            raise ValueError(
+                "serving_dir requires the classifier stage "
+                "(classifier_epochs > 0): the serving bundle carries the "
+                "trained classifier and its offline answer key")
         # resolve the partitioner spec up front: a bad method string fails
         # here, before any dataset/partition work happens
         spec = PartitionerSpec.parse(cfg.method)
@@ -287,11 +298,13 @@ class Pipeline:
 
         # -- stage 4: classifier on assembled embeddings ---------------
         accuracy: Dict[str, float] = {}
+        classifier_params = None
         if cfg.classifier_epochs > 0:
             t0 = time.time()
-            accuracy = train_classifier(
+            accuracy, classifier_params = train_classifier(
                 ds, embeddings, hidden=cfg.classifier_hidden,
-                epochs=cfg.classifier_epochs, seed=cfg.seed)
+                epochs=cfg.classifier_epochs, seed=cfg.seed,
+                return_params=True)
             timings["classifier"] = time.time() - t0
 
         # -- stage 5: optional checkpoint ------------------------------
@@ -301,6 +314,18 @@ class Pipeline:
             checkpoint_path = save_checkpoint(cfg.checkpoint_dir,
                                               cfg.epochs, params)
             log.info("saved model checkpoint: %s", checkpoint_path)
+
+        # -- stage 6: serving bundle export (DESIGN.md §13) ------------
+        serving_path = None
+        if cfg.serving_dir:
+            # lazy import: repro.serving imports repro.gnn/pipeline pieces
+            from repro.serving.store import export_from_pipeline
+            t0 = time.time()
+            serving_path = export_from_pipeline(
+                cfg.serving_dir, ds=ds, bundle=bundle, params=params,
+                classifier=classifier_params, embeddings=embeddings)
+            timings["serving_export"] = time.time() - t0
+            log.info("exported serving bundle: %s", serving_path)
 
         timings["total"] = time.time() - t_all
         src_once = ds.graph.num_arcs // 2
@@ -324,4 +349,5 @@ class Pipeline:
             timings={k: round(v, 4) for k, v in timings.items()},
             checkpoint_path=checkpoint_path,
             partition_fingerprint=bundle.fingerprint or spec.fingerprint(),
+            serving_path=serving_path,
         )

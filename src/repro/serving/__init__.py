@@ -1,0 +1,38 @@
+"""Partition-sharded embedding serving (DESIGN.md §13).
+
+The online half of the Leiden-Fusion story: the offline pipeline trains one
+GNN per partition and pools a global embedding table; this package serves
+that table — shard-routed lookups keyed by partition label, continuous
+batching at fixed pow2 bucket shapes (zero steady-state recompiles), an LRU
+hot-node cache, and an inductive fallback that aggregates a *new* node's
+neighbors through the training aggregation kernel and answers with the
+owning partition's head.
+
+Entry points:
+
+- ``python -m repro.serving`` — end-to-end Zipf replay (the acceptance path)
+- ``python -m repro.serving serve`` / ``client`` — multi-process layout
+- :func:`export_from_pipeline` — bundle export hook (called by the pipeline
+  when ``PipelineConfig.serving_dir`` is set)
+- :class:`EmbeddingStore` / :class:`ContinuousBatcher` — library use
+"""
+from .batcher import (Answer, CompileLog, ContinuousBatcher, Query,
+                      bucket_of, bucket_sizes)
+from .cache import LruNodeCache
+from .inductive import InductiveEngine, route_neighbors
+from .replay import (DEFAULT_BENCH_JSON, append_bench_rows,
+                     make_zipf_workload, run_replay)
+from .store import (SERVING_VERSION, EmbeddingStore, ShardStore,
+                    StaleServingArtifact, export_from_pipeline,
+                    export_serving_bundle)
+
+__all__ = [
+    "Answer", "CompileLog", "ContinuousBatcher", "Query",
+    "bucket_of", "bucket_sizes",
+    "LruNodeCache",
+    "InductiveEngine", "route_neighbors",
+    "DEFAULT_BENCH_JSON", "append_bench_rows", "make_zipf_workload",
+    "run_replay",
+    "SERVING_VERSION", "EmbeddingStore", "ShardStore",
+    "StaleServingArtifact", "export_from_pipeline", "export_serving_bundle",
+]

@@ -1,0 +1,133 @@
+"""Inductive fallback: answer nodes the training run never saw.
+
+A query for an unknown node id arrives with the ids of its (known)
+neighbors. Instead of failing, the serving layer:
+
+1. routes the query to the partition owning the *majority* of those
+   neighbors (ties break to the smallest pid — deterministic);
+2. aggregates the neighbors' stored embeddings on the fly through the SAME
+   ``aggregate_mean`` primitive the training path uses (`use_kernel=True`
+   runs the PR 4 differentiable Pallas kernel, `False` the jnp
+   segment-sum — bit-identical semantics, pinned by tests);
+3. runs the owning partition's trained GNN head on the aggregate.
+
+Shapes are fixed per flush bucket — ``[B_pad * (1 + max_neighbors)]`` rows,
+one synthetic star graph per query — so the steady state never recompiles
+(the same discipline as the known-node path, DESIGN.md §13).
+
+A query with ZERO known neighbors degrades gracefully: the aggregate is the
+zero vector, the answer is the head-bias argmax of shard 0 and is flagged
+``degraded`` — never a crash.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["InductiveEngine", "route_neighbors"]
+
+
+def route_neighbors(partition_of: np.ndarray,
+                    neighbors: Optional[Sequence[int]]
+                    ) -> Tuple[int, np.ndarray]:
+    """(owning pid, known-neighbor ids) for an unseen node.
+
+    Neighbors outside ``[0, n)`` are discarded (they are not in the store);
+    with no known neighbor the pid is ``-1`` — the degraded path."""
+    n = partition_of.shape[0]
+    nb = np.asarray(neighbors if neighbors is not None else [],
+                    dtype=np.int64).reshape(-1)
+    nb = nb[(nb >= 0) & (nb < n)]
+    if nb.size == 0:
+        return -1, nb
+    counts = np.bincount(partition_of[nb])
+    return int(counts.argmax()), nb
+
+
+@functools.partial(jax.jit, static_argnames=("max_neighbors", "use_kernel"))
+def _aggregate_and_head(nb_emb, nb_mask, head_w, head_b, *,
+                        max_neighbors: int, use_kernel: bool):
+    """Fixed-shape batched star-graph aggregation + per-query head.
+
+    nb_emb: [B, M, E] neighbor embeddings (zero rows where masked)
+    nb_mask: [B, M] 1.0 for a real neighbor
+    head_w: [B, E, C], head_b: [B, C] — the owning shard's head, gathered
+    per query by the caller.
+
+    Row layout of the synthetic graph: the first B rows are the query nodes
+    (zero features), followed by the B*M neighbor rows; every arc points a
+    neighbor row at its query row with the mask as weight, so
+    ``aggregate_mean`` lands the masked neighbor mean exactly on rows
+    ``[:B]`` on both the jnp and the Pallas path.
+    """
+    from repro.gnn.layers import aggregate_mean
+
+    b, m, e = nb_emb.shape
+    assert m == max_neighbors, (m, max_neighbors)
+    h = jnp.concatenate(
+        [jnp.zeros((b, e), nb_emb.dtype), nb_emb.reshape(b * m, e)], axis=0)
+    edge_src = b + jnp.arange(b * m, dtype=jnp.int32)
+    edge_dst = jnp.repeat(jnp.arange(b, dtype=jnp.int32), m)
+    weight = nb_mask.reshape(-1).astype(jnp.float32)
+    counts = nb_mask.sum(axis=1)
+    in_degree = jnp.concatenate(
+        [counts, jnp.ones((b * m,), jnp.float32)], axis=0)
+    agg = aggregate_mean(h, edge_src, edge_dst, weight, in_degree,
+                         use_kernel=use_kernel)[:b]
+    logits = jnp.einsum("be,bec->bc", agg, head_w) + head_b
+    return agg, logits
+
+
+class InductiveEngine:
+    """Batched on-the-fly aggregation for unseen nodes."""
+
+    def __init__(self, store, max_neighbors: int = 32,
+                 use_kernel: bool = False):
+        self.store = store
+        self.max_neighbors = int(max_neighbors)
+        self.use_kernel = bool(use_kernel)
+
+    def route(self, neighbors) -> Tuple[int, np.ndarray]:
+        return route_neighbors(self.store.partition_of, neighbors)
+
+    def prepare(self, neighbor_lists: List[np.ndarray], b_pad: int
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host-side gather into the fixed [b_pad, M, E] layout.
+
+        Returns (nb_emb, nb_mask, pids). Neighbor lists longer than
+        ``max_neighbors`` are truncated (deterministically, by position)."""
+        m, e = self.max_neighbors, self.store.embed_dim
+        nb_emb = np.zeros((b_pad, m, e), dtype=np.float32)
+        nb_mask = np.zeros((b_pad, m), dtype=np.float32)
+        pids = np.zeros(b_pad, dtype=np.int32)
+        for i, nbs in enumerate(neighbor_lists):
+            pid, known = route_neighbors(self.store.partition_of, nbs)
+            known = known[:m]
+            pids[i] = max(pid, 0)      # degraded queries compute on shard 0
+            if known.size:
+                nb_emb[i, :known.size] = self.store.lookup(known)
+                nb_mask[i, :known.size] = 1.0
+        return nb_emb, nb_mask, pids
+
+    def infer(self, neighbor_lists: List[np.ndarray], b_pad: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(embeddings [b_pad, E], logits [b_pad, C], degraded [b_pad]).
+
+        Only the first ``len(neighbor_lists)`` rows are real queries."""
+        nb_emb, nb_mask, pids = self.prepare(neighbor_lists, b_pad)
+        head_w = jnp.asarray(self.store.head_w)[pids]
+        head_b = jnp.asarray(self.store.head_b)[pids]
+        emb, logits = _aggregate_and_head(
+            jnp.asarray(nb_emb), jnp.asarray(nb_mask), head_w, head_b,
+            max_neighbors=self.max_neighbors, use_kernel=self.use_kernel)
+        degraded = nb_mask.sum(axis=1) == 0
+        return np.asarray(emb), np.asarray(logits), degraded
+
+    @property
+    def jitted(self):
+        """The underlying jitted callable (compile accounting hooks here)."""
+        return _aggregate_and_head

@@ -1,0 +1,153 @@
+"""Synthetic query-replay client + serving metrics (DESIGN.md §13).
+
+Generates a Zipf-shaped workload over the store's node population (hot-set
+concentration is what makes the LRU cache earn its hit rate), mixes in a
+fraction of *unseen* node ids carrying neighbor lists (the inductive
+fallback path, always including one zero-neighbor query so the degraded
+path is exercised every run), drives the continuous batcher, and reduces
+the answers to the ``BENCH_serving.json`` row schema:
+
+    throughput_qps, p50_ms, p99_ms, cache_hit_rate,
+    steady_state_recompiles, served/exact-match counters
+
+Known-node answers are verified against the bundle's offline answer key
+(``EmbeddingStore.predictions`` — the argmax of the trained classifier over
+the pooled table, i.e. exactly what the offline ``PipelineReport``
+evaluation predicts); ``verify=True`` hard-fails on any mismatch.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .batcher import Answer, ContinuousBatcher
+
+__all__ = ["make_zipf_workload", "run_replay", "append_bench_rows",
+           "DEFAULT_BENCH_JSON"]
+
+DEFAULT_BENCH_JSON = os.path.join("benchmarks", "artifacts",
+                                  "BENCH_serving.json")
+
+Workload = List[Tuple[int, Optional[np.ndarray]]]
+
+
+def make_zipf_workload(n: int, num_queries: int = 10_000,
+                       alpha: float = 1.1, unseen_frac: float = 0.02,
+                       max_neighbors: int = 32, seed: int = 0) -> Workload:
+    """(node_id, neighbors) pairs; neighbors only for unseen ids >= n.
+
+    Known queries draw node *ranks* from a Zipf(alpha) law mapped through a
+    seed-fixed permutation (so the hot set is not just the low ids).
+    Unseen queries get fresh ids ``n, n+1, ...`` and 1..max_neighbors known
+    neighbors biased toward the same hot set; the FIRST unseen query has no
+    neighbors at all — the degraded path is replayed every time."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    ranks = rng.zipf(alpha, size=num_queries * 2)
+    ranks = ranks[ranks <= n][:num_queries] - 1
+    while ranks.shape[0] < num_queries:    # top up the rejected tail
+        extra = rng.zipf(alpha, size=num_queries)
+        extra = extra[extra <= n] - 1
+        ranks = np.concatenate([ranks, extra])[:num_queries]
+    nodes = perm[ranks]
+
+    workload: Workload = [(int(v), None) for v in nodes]
+    n_unseen = int(round(num_queries * unseen_frac))
+    if n_unseen:
+        slots = rng.choice(num_queries, size=n_unseen, replace=False)
+        for j, slot in enumerate(np.sort(slots)):
+            if j == 0:
+                nbs = np.zeros(0, dtype=np.int64)   # zero-known-neighbor
+            else:
+                d = int(rng.integers(1, max_neighbors + 1))
+                nbs = perm[np.minimum(rng.zipf(alpha, size=d), n) - 1]
+            workload[slot] = (n + j, nbs)
+    return workload
+
+
+def run_replay(batcher: ContinuousBatcher, workload: Workload,
+               verify: bool = True) -> Dict[str, Any]:
+    """Drive the batcher through the workload; returns the metrics row."""
+    store = batcher.store
+    warm_compiles = batcher.warmup()
+    answers: List[Answer] = []
+    t0 = time.perf_counter()
+    for node_id, neighbors in workload:
+        batcher.submit(node_id, neighbors=neighbors)
+        answers.extend(batcher.pump())
+    answers.extend(batcher.drain())
+    wall = time.perf_counter() - t0
+
+    assert len(answers) == len(workload), (len(answers), len(workload))
+    lat = np.asarray([a.latency_ms for a in answers])
+    by_source: Dict[str, int] = {}
+    mismatches = []
+    for a in answers:
+        by_source[a.source] = by_source.get(a.source, 0) + 1
+        if store.is_known(a.node_id) and \
+                a.label != int(store.predictions[a.node_id]):
+            mismatches.append((a.qid, a.node_id, a.label,
+                               int(store.predictions[a.node_id])))
+    if verify and mismatches:
+        raise AssertionError(
+            f"{len(mismatches)} served labels diverge from the offline "
+            f"answer key (first: {mismatches[:3]}) — serving must match "
+            f"the PipelineReport predictions exactly")
+
+    stats = batcher.stats()
+    return {
+        "queries": len(workload),
+        "wall_s": round(wall, 3),
+        "throughput_qps": round(len(workload) / max(wall, 1e-9), 1),
+        "p50_ms": round(float(np.percentile(lat, 50)), 3),
+        "p99_ms": round(float(np.percentile(lat, 99)), 3),
+        "mean_ms": round(float(lat.mean()), 3),
+        "cache_hit_rate": stats["cache"]["hit_rate"],
+        "warm_compiles": warm_compiles,
+        "steady_state_recompiles": stats["steady_state_recompiles"],
+        "flushes": stats["flushes"],
+        "served_by_source": by_source,
+        "per_shard_served": stats["per_shard_served"],
+        "label_mismatches": len(mismatches),
+        "k": store.k,
+        "n": store.n,
+        "max_batch": batcher.max_batch,
+        "max_wait_ms": batcher.max_wait_ms,
+        "use_kernel": batcher.inductive.use_kernel,
+        "partition_fingerprint": store.fingerprint,
+    }
+
+
+def append_bench_rows(rows: List[Dict[str, Any]],
+                      path: str = DEFAULT_BENCH_JSON) -> str:
+    """Append rows to the BENCH_serving.json trajectory.
+
+    Uses ``benchmarks.common.append_bench_json`` when the benchmarks
+    package is importable (normal repo-root invocation); otherwise falls
+    back to an equivalent local atomic append so ``python -m repro.serving``
+    works from anywhere."""
+    try:
+        from benchmarks.common import append_bench_json
+        append_bench_json(path, rows)
+        return path
+    except ImportError:
+        pass
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (OSError, ValueError):
+            history = []
+    stamp = time.time()
+    history.extend({**r, "ts": stamp} for r in rows)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=2)
+    os.replace(tmp, path)
+    return path

@@ -1,0 +1,261 @@
+"""Partition-sharded embedding store (DESIGN.md §13).
+
+The serving counterpart of the training-side artifact cache: one pipeline
+run exports a **serving bundle** — pooled node embeddings, the trained
+classifier MLP, the k per-partition GNN heads, and the partition assignment
+— as a single content-addressed ``.npz``; :class:`EmbeddingStore` loads it
+back as k :class:`ShardStore` shards plus a routing table.
+
+Two fingerprints guard staleness, both hard errors at load time:
+
+* the **partition fingerprint** (the spec config fingerprint that also keys
+  the training artifact cache, DESIGN.md §9) — a bundle exported from a
+  differently-parameterized partitioner never serves a query;
+* the **graph fingerprint** (topology hash, ``repro.pipeline.datasets.
+  graph_fingerprint``) when the caller has the graph in hand.
+
+Lookups are *sharded*: the global embedding table is never materialized at
+load time — node ids route through ``partition_of`` to their owning shard
+and gather from that shard's local rows, exactly how a multi-host
+deployment would fan queries out (SNIPPETS §2 is the DGL shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["SERVING_VERSION", "StaleServingArtifact", "ShardStore",
+           "EmbeddingStore", "export_serving_bundle", "export_from_pipeline"]
+
+SERVING_VERSION = 1
+
+
+class StaleServingArtifact(RuntimeError):
+    """A serving bundle whose fingerprints do not match the request.
+
+    Serving from a stale bundle silently answers with embeddings of a
+    *different* partitioning/graph, so any mismatch is a hard error — the
+    caller must re-export, never degrade."""
+
+
+# ---------------------------------------------------------------------------
+# Export
+# ---------------------------------------------------------------------------
+def _atomic_savez(path: str, **arrays) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez_compressed(f, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def export_serving_bundle(directory: str, *, part_labels: np.ndarray,
+                          embeddings: np.ndarray, predictions: np.ndarray,
+                          head_w: np.ndarray, head_b: np.ndarray,
+                          classifier: Dict[str, Any],
+                          meta: Dict[str, Any]) -> str:
+    """Write one serving bundle under ``directory``; returns its path.
+
+    The filename embeds the partition fingerprint so differently-partitioned
+    exports coexist; the write is atomic (tmp + ``os.replace``)."""
+    meta = {"kind": "serving", "version": SERVING_VERSION, **meta}
+    fp = meta.get("partition_fingerprint") or "nofp"
+    path = os.path.join(directory, f"serving-{fp}.npz")
+    _atomic_savez(
+        path,
+        meta_json=np.asarray(json.dumps(meta, sort_keys=True)),
+        part_labels=np.asarray(part_labels, np.int32),
+        embeddings=np.asarray(embeddings, np.float32),
+        predictions=np.asarray(predictions, np.int32),
+        head_w=np.asarray(head_w, np.float32),
+        head_b=np.asarray(head_b, np.float32),
+        **{f"clf_{k}": np.asarray(v, np.float32)
+           for k, v in classifier.items()})
+    return path
+
+
+def export_from_pipeline(directory: str, *, ds, bundle, params,
+                         classifier, embeddings: np.ndarray,
+                         extra_meta: Optional[Dict[str, Any]] = None) -> str:
+    """The pipeline's export hook (called from ``Pipeline.run`` when
+    ``serving_dir`` is set): derives predictions/heads/meta from the run's
+    live objects and writes the bundle.
+
+    ``predictions`` is the offline answer key — argmax of the trained
+    classifier over the full pooled table — which the replay client checks
+    served labels against, exactly.
+    """
+    import jax.numpy as jnp
+    from repro.gnn import mlp_forward
+    from repro.pipeline.datasets import graph_fingerprint
+
+    if classifier is None:
+        raise ValueError("serving export needs the trained classifier — "
+                         "run with classifier_epochs > 0")
+    logits = np.asarray(mlp_forward(classifier, jnp.asarray(embeddings)))
+    predictions = logits.argmax(-1).astype(np.int32)
+    head = params["head"]
+    meta = {
+        "partition_fingerprint": bundle.fingerprint,
+        "spec": bundle.spec,
+        "graph": graph_fingerprint(ds.graph),
+        "dataset": ds.name,
+        "n": int(ds.graph.n),
+        "k": int(bundle.batch.k),
+        "num_classes": int(ds.num_classes),
+        "embed_dim": int(embeddings.shape[1]),
+        **(extra_meta or {}),
+    }
+    return export_serving_bundle(
+        directory,
+        part_labels=bundle.labels,
+        embeddings=embeddings,
+        predictions=predictions,
+        head_w=np.asarray(head["w"]),
+        head_b=np.asarray(head["b"]),
+        classifier={k: np.asarray(v) for k, v in classifier.items()},
+        meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Load / lookup
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardStore:
+    """One partition's slice of the store: owned rows + that partition's
+    trained GNN head (the inductive fallback runs it, DESIGN.md §13)."""
+    pid: int
+    node_ids: np.ndarray       # [m] global ids owned by this shard (sorted)
+    embeddings: np.ndarray     # [m, E] rows aligned with node_ids
+    head_w: np.ndarray         # [E, C]
+    head_b: np.ndarray         # [C]
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_ids.shape[0])
+
+
+class EmbeddingStore:
+    """k-sharded read view of one serving bundle."""
+
+    def __init__(self, meta: Dict[str, Any], part_labels: np.ndarray,
+                 embeddings: np.ndarray, predictions: np.ndarray,
+                 head_w: np.ndarray, head_b: np.ndarray,
+                 classifier: Dict[str, np.ndarray]):
+        self.meta = meta
+        self.n = int(part_labels.shape[0])
+        self.k = int(head_w.shape[0])
+        self.embed_dim = int(embeddings.shape[1])
+        self.num_classes = int(head_w.shape[2])
+        self.partition_of = part_labels.astype(np.int32)
+        self.predictions = predictions.astype(np.int32)
+        self.classifier = classifier
+        # shard the flat table: local row index per global node
+        self._local_row = np.zeros(self.n, dtype=np.int64)
+        self.shards: List[ShardStore] = []
+        for p in range(self.k):
+            owned = np.where(self.partition_of == p)[0]
+            self._local_row[owned] = np.arange(owned.shape[0])
+            self.shards.append(ShardStore(
+                pid=p, node_ids=owned,
+                embeddings=np.ascontiguousarray(embeddings[owned]),
+                head_w=head_w[p], head_b=head_b[p]))
+        self.head_w = head_w        # [k, E, C] (inductive engine gathers)
+        self.head_b = head_b        # [k, C]
+
+    # ----- construction ---------------------------------------------------
+    @classmethod
+    def load(cls, path: str, expect_fingerprint: Optional[str] = None,
+             expect_graph: Optional[str] = None) -> "EmbeddingStore":
+        """Load a bundle file (or the unique/matching bundle in a directory).
+
+        ``expect_fingerprint``/``expect_graph`` mismatches raise
+        :class:`StaleServingArtifact` — a stale bundle is never served."""
+        path = cls.resolve(path, expect_fingerprint)
+        with np.load(path, allow_pickle=False) as z:
+            data = {k: z[k] for k in z.files}
+        meta = json.loads(str(data.pop("meta_json")))
+        if meta.get("kind") != "serving" or \
+                meta.get("version") != SERVING_VERSION:
+            raise StaleServingArtifact(
+                f"{path}: not a v{SERVING_VERSION} serving bundle "
+                f"(meta={meta.get('kind')!r} v{meta.get('version')!r})")
+        if expect_fingerprint is not None and \
+                meta.get("partition_fingerprint") != expect_fingerprint:
+            raise StaleServingArtifact(
+                f"{path}: partition fingerprint "
+                f"{meta.get('partition_fingerprint')!r} != expected "
+                f"{expect_fingerprint!r} — re-export the bundle "
+                f"(pipeline run --serving-dir) instead of serving stale "
+                f"embeddings")
+        if expect_graph is not None and meta.get("graph") != expect_graph:
+            raise StaleServingArtifact(
+                f"{path}: graph fingerprint mismatch — the bundle was "
+                f"exported from a different graph")
+        classifier = {k[len("clf_"):]: v for k, v in data.items()
+                      if k.startswith("clf_")}
+        return cls(meta, data["part_labels"], data["embeddings"],
+                   data["predictions"], data["head_w"], data["head_b"],
+                   classifier)
+
+    @staticmethod
+    def resolve(path: str, expect_fingerprint: Optional[str] = None) -> str:
+        """Resolve a bundle path: a file is taken as-is; a directory picks
+        the fingerprint-matching bundle (or the newest when no fingerprint
+        is expected)."""
+        if os.path.isdir(path):
+            if expect_fingerprint:
+                cand = os.path.join(path, f"serving-{expect_fingerprint}.npz")
+                if not os.path.exists(cand):
+                    raise StaleServingArtifact(
+                        f"no serving bundle for fingerprint "
+                        f"{expect_fingerprint!r} under {path} — export one "
+                        f"with pipeline run --serving-dir")
+                return cand
+            bundles = sorted(
+                (os.path.getmtime(os.path.join(path, f)),
+                 os.path.join(path, f))
+                for f in os.listdir(path)
+                if f.startswith("serving-") and f.endswith(".npz"))
+            if not bundles:
+                raise FileNotFoundError(f"no serving bundles under {path}")
+            return bundles[-1][1]
+        return path
+
+    # ----- queries --------------------------------------------------------
+    @property
+    def fingerprint(self) -> str:
+        return self.meta.get("partition_fingerprint", "")
+
+    def is_known(self, node_id: int) -> bool:
+        return 0 <= node_id < self.n
+
+    def shard(self, pid: int) -> ShardStore:
+        return self.shards[pid]
+
+    def lookup(self, node_ids: np.ndarray) -> np.ndarray:
+        """Gather embeddings for known nodes, routed shard-by-shard."""
+        ids = np.asarray(node_ids, dtype=np.int64)
+        out = np.empty((ids.shape[0], self.embed_dim), dtype=np.float32)
+        pids = self.partition_of[ids]
+        for p in np.unique(pids):
+            sel = pids == p
+            out[sel] = self.shards[p].embeddings[self._local_row[ids[sel]]]
+        return out
+
+    def summary(self) -> str:
+        rows = ", ".join(f"p{s.pid}:{s.num_nodes}" for s in self.shards)
+        return (f"EmbeddingStore(n={self.n}, k={self.k}, "
+                f"E={self.embed_dim}, C={self.num_classes}, "
+                f"fp={self.fingerprint}, shards=[{rows}])")
