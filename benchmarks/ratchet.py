@@ -1,0 +1,105 @@
+"""One-way training-perf ratchet (the CI gate for ROADMAP item 4).
+
+Reads the latest paired smoke rows from
+``benchmarks/artifacts/BENCH_training_time.json`` (same k/scheme/epochs,
+``kernel: true`` vs ``kernel: false`` stamped by one run) and FAILS unless
+
+    kernel_wall <= jnp_wall * max_ratio
+
+where ``max_ratio`` comes from ``benchmarks/waivers.json`` for the current
+backend (default 1.0 — the kernel path must WIN or tie). Waivers are the
+explicit, documented escape hatch per backend; there is no silent slack.
+The trajectory can only move one way: once the kernel path beats jnp on a
+backend, a regression fails the build.
+
+    PYTHONPATH=src python -m benchmarks.training_time --smoke   # produce
+    PYTHONPATH=src python -m benchmarks.ratchet                 # gate
+
+Exit codes: 0 pass, 1 regression, 2 missing/unpaired data (the smoke run
+must happen first — CI orders the steps).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .common import ARTIFACTS
+
+BENCH_JSON = os.path.join(ARTIFACTS, "BENCH_training_time.json")
+WAIVERS_JSON = os.path.join(os.path.dirname(__file__), "waivers.json")
+
+
+def load_waiver(backend: str) -> tuple[float, str]:
+    """(max_ratio, reason) for ``backend`` from the waiver table."""
+    try:
+        with open(WAIVERS_JSON) as f:
+            table = json.load(f).get("training_time", {})
+    except (OSError, ValueError):
+        table = {}
+    entry = table.get("backends", {}).get(backend)
+    if entry:
+        return float(entry["max_ratio"]), entry.get("reason", "")
+    return float(table.get("default_max_ratio", 1.0)), "default (no waiver)"
+
+
+def latest_smoke_pair(history: list) -> tuple[dict, dict] | None:
+    """Most recent (jnp_row, kernel_row) sharing ts/k/scheme/epochs."""
+    by_ts: dict = {}
+    for row in history:
+        by_ts.setdefault(row.get("ts"), []).append(row)
+    for ts in sorted(by_ts, key=lambda t: t or 0, reverse=True):
+        rows = by_ts[ts]
+        for kr in rows:
+            if not kr.get("kernel"):
+                continue
+            for jr in rows:
+                if (not jr.get("kernel")
+                        and jr.get("k") == kr.get("k")
+                        and jr.get("scheme") == kr.get("scheme")
+                        and jr.get("epochs") == kr.get("epochs")):
+                    return jr, kr
+    return None
+
+
+def check(verbose: bool = True) -> int:
+    import jax
+    backend = jax.default_backend()
+    if not os.path.exists(BENCH_JSON):
+        print(f"ratchet: no {BENCH_JSON} — run "
+              "`python -m benchmarks.training_time --smoke` first")
+        return 2
+    with open(BENCH_JSON) as f:
+        history = json.load(f)
+    pair = latest_smoke_pair(history)
+    if pair is None:
+        print("ratchet: no paired kernel/jnp rows in the trajectory")
+        return 2
+    jnp_row, kernel_row = pair
+    ratio = kernel_row["wall_s"] / max(jnp_row["wall_s"], 1e-9)
+    max_ratio, reason = load_waiver(backend)
+    ok = ratio <= max_ratio
+    if verbose:
+        print(f"ratchet[{backend}]: kernel {kernel_row['wall_s']}s "
+              f"(strategy={kernel_row.get('strategy', '?')}) vs "
+              f"jnp {jnp_row['wall_s']}s at k={kernel_row['k']} "
+              f"scheme={kernel_row['scheme']} epochs={kernel_row['epochs']} "
+              f"-> ratio {ratio:.3f} (max {max_ratio:.2f})")
+        if max_ratio != 1.0:
+            print(f"ratchet[{backend}]: waiver active — {reason}")
+        verdict = ("PASS" if ok
+                   else "FAIL — kernel path regressed past the waiver "
+                        "ceiling")
+        print(f"ratchet[{backend}]: {verdict}")
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.parse_args()
+    sys.exit(check())
+
+
+if __name__ == "__main__":
+    main()

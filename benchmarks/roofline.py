@@ -19,13 +19,21 @@ DRYRUN_DIR = os.path.join(ARTIFACTS, "dryrun")
 
 
 def gnn_train_step_costs():
-    """Compiled-HLO cost of one local train step, jnp vs kernel path."""
+    """Compiled-HLO cost of one local train step per kernel strategy.
+
+    Besides jnp vs the autotune-resolved kernel path, the table forces each
+    kernel strategy via ``autotune.override`` (DESIGN.md §14) so the cost
+    model of the fused layer vs the unfused kernel vs the XLA lowering is
+    visible side by side — the compiled step includes the custom-VJP
+    transpose aggregation and edge-dot kernels in every pallas row."""
+    import contextlib
     import jax
     import jax.numpy as jnp
     from repro.core import build_partition_batch, partition_from_spec
     from repro.gnn import (GNNConfig, gather_partition_tensors,
                            init_partition_models, make_local_train_step)
     from repro.gnn.train import _tensors_dict
+    from repro.kernels.autotune import KernelConfig, get_config, override
     from repro.launch.hlo_analysis import normalize_cost_analysis
     from repro.optim import adamw_init
 
@@ -34,8 +42,15 @@ def gnn_train_step_costs():
     batch = build_partition_batch(ds.graph, labels, scheme="repli")
     pt = gather_partition_tensors(ds, batch)
     tensors = {n: jnp.asarray(v) for n, v in _tensors_dict(pt).items()}
+    resolved = get_config(batch.n_pad, batch.e_pad, 128)
+    variants = [
+        ("jnp", False, None),
+        (f"kernel[{resolved.strategy}]", True, None),   # what dispatch picks
+        ("kernel[pallas]", True, KernelConfig(strategy="pallas")),
+        ("kernel[pallas_fused]", True, KernelConfig(strategy="pallas_fused")),
+    ]
     rows = []
-    for use_kernel in (False, True):
+    for label, use_kernel, forced in variants:
         cfg = GNNConfig(kind="gcn", feature_dim=int(ds.features.shape[1]),
                         hidden_dim=128, embed_dim=128, num_layers=3,
                         dropout=0.0, use_kernel=use_kernel)
@@ -44,12 +59,14 @@ def gnn_train_step_costs():
         opt = jax.vmap(adamw_init)(params)
         step = jax.jit(make_local_train_step(cfg, False, lr=5e-3))
         keys = jax.random.split(jax.random.PRNGKey(1), batch.k)
-        compiled = step.lower(params, opt, tensors, keys).compile()
+        ctx = override(forced) if forced else contextlib.nullcontext()
+        with ctx:
+            compiled = step.lower(params, opt, tensors, keys).compile()
         ca = normalize_cost_analysis(compiled.cost_analysis())
         flops = float(ca.get("flops", 0.0))
         byts = float(ca.get("bytes accessed", 0.0))
         rows.append({
-            "aggregation": "kernel" if use_kernel else "jnp",
+            "aggregation": label,
             "k": batch.k, "n_pad": batch.n_pad, "e_pad": batch.e_pad,
             "flops": flops, "bytes_accessed": byts,
             "arith_intensity": round(flops / byts, 3) if byts else None,

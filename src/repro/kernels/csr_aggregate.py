@@ -1,5 +1,5 @@
 """Pallas TPU kernel: weighted neighbor aggregation (edge-list SpMM),
-node-tiled and differentiable.
+node-tiled, streamed, and differentiable.
 
 The GNN hot-spot: ``out[d] += w[e] * h[src[e]]`` over a weight-0-padded
 arc list. GPU implementations use shared-memory atomics; TPU has no scatter
@@ -13,24 +13,38 @@ matmul** that feeds the MXU —
     after the last edge block:
         out[N_t, F_t] *= inv_scale[N_t, None]         # fused epilogue
 
-Blocking: the grid is (node tiles × feature tiles × edge blocks). Earlier
-revisions kept the whole node dimension resident, which capped partitions at
-~8k padded nodes; the node dimension is now tiled (``NODE_TILE`` rows of the
-one-hot scatter matrix per step, rows outside the tile masked to zero), so
-the VMEM working set per step is
+Blocking: the grid is (node tiles × feature tiles × edge granules). The
+tile sizes are no longer fixed constants — they come from a
+:class:`repro.kernels.autotune.KernelConfig` (the module constants are the
+untuned PR 4 point and remain the default). Two perf refinements over the
+PR 4 kernel (DESIGN.md §14):
 
-    (N·FT + NT·EB + NT·FT + EB·FT) · 4 B
+* **Degenerate-tile fast path.** ``edge_dst`` arrives sorted (the assemble
+  layout), so most edge blocks touch one or two node tiles. The wrapper
+  precomputes each block's dst range ``[lo, hi]`` (two tiny int32 arrays,
+  passed through SMEM like ``flash_decode``'s length scalar) and the kernel
+  wraps the gather + one-hot matmul in ``pl.when(block ∩ tile ≠ ∅)`` — a
+  skipped block costs a scalar compare instead of an [NT, EB] × [EB, FT]
+  MXU pass. Weight-0 padding arcs can only *widen* a block's range, never
+  corrupt a result, so the contract below is unchanged.
+
+* **Double-buffered edge streaming.** The edge BlockSpec loads
+  ``stream × edge_block`` arcs per grid step (one larger DMA granule that
+  Pallas pipelines against compute across grid steps), and the kernel
+  unrolls over the ``stream`` sub-blocks, each with its own skip guard —
+  bigger copies in flight, same per-matmul shapes.
+
+The VMEM working set per step is
+
+    (N·FT + 3·EB·S + NT·FT) · 4 B
 
 where only the gather operand ``h`` (one [N, FT] feature column) still
-scales with N. With NT=512, FT=128, EB=256 and N=25 600 (PR 3's
-``--dataset-scale`` partitions: 100k nodes / k=4, plus halo and padding)
-that is 13.1 + 0.5 + 0.25 + 0.13 ≈ 14 MB — inside the ~16 MB VMEM budget;
-the old layout needed N·EB = 25 MB for the scatter matrix alone. The output
-block index is independent of the edge-block grid dimension, so Pallas keeps
-it resident and we accumulate across edge blocks (init at block 0, scale
-epilogue at the last block). Accumulation is f32. Beyond N ≈ 28k padded
-nodes the gather operand itself would have to be streamed from HBM; the
-paper's partitioning keeps partitions far smaller (k scales with the graph).
+scales with N; beyond N ≈ 28k padded nodes the gather operand itself would
+have to be streamed from HBM — the paper's partitioning keeps partitions
+far smaller (k scales with the graph). The output block index is
+independent of the edge-granule grid dimension, so Pallas keeps it resident
+and we accumulate across granules (init at granule 0, scale epilogue at the
+last). Accumulation is f32.
 
 Differentiation (DESIGN.md §11): ``csr_aggregate_pallas`` carries a
 ``jax.custom_vjp``. With A the [N, N] weighted adjacency the forward is
@@ -57,35 +71,118 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from .autotune import KernelConfig
+
+# The untuned PR 4 tile point — kept as module constants for back-compat
+# and as the default KernelConfig; the autotuner supersedes them per
+# (backend, shape-bucket).
 NODE_TILE = 512
 EDGE_BLOCK = 256
 FEAT_TILE = 128
 
+DEFAULT_CONFIG = KernelConfig(strategy="pallas", node_tile=NODE_TILE,
+                              edge_block=EDGE_BLOCK, feat_tile=FEAT_TILE,
+                              stream=1)
 
-def _agg_kernel(src_ref, dst_ref, w_ref, inv_ref, h_ref, out_ref):
-    eb = pl.program_id(2)
 
-    @pl.when(eb == 0)
+class ShapeContractError(ValueError):
+    """A kernel input violates the F/E/N divisibility contract.
+
+    Carries which constraint failed and the nearest valid padded shape, so
+    the caller (usually a human who bypassed :mod:`repro.kernels.ops`)
+    knows exactly what to pad to."""
+
+    def __init__(self, failures, got, valid):
+        self.failures = tuple(failures)
+        self.got = got
+        self.valid = valid
+        super().__init__(
+            "kernel shape contract violated: "
+            + "; ".join(failures)
+            + f". Got (N={got[0]}, F={got[1]}, E={got[2]}); nearest valid "
+              f"padded shape is (N={valid[0]}, F={valid[1]}, E={valid[2]}). "
+              "repro.kernels.ops.csr_aggregate applies this padding "
+              "automatically (weight-0 arcs, see its padding contract).")
+
+
+def check_shape_contract(n: int, f: int, e: int, num_nodes: int,
+                         config: KernelConfig) -> None:
+    """Raise :class:`ShapeContractError` naming every violated constraint."""
+    ft, granule, nt = config.feat_tile, config.edge_granule, config.node_tile
+    failures = []
+    if n != num_nodes:
+        failures.append(f"N={n} != num_nodes={num_nodes} (pad h first)")
+    if f % ft != 0:
+        failures.append(f"F={f} not a multiple of feat_tile={ft}")
+    if e % granule != 0:
+        failures.append(
+            f"E={e} not a multiple of edge_block*stream="
+            f"{config.edge_block}*{config.stream}={granule}")
+    if n > nt:
+        if n % nt != 0:
+            failures.append(
+                f"N={n} > node_tile={nt} but not a multiple of it")
+    elif n % 8 == 0:
+        pass
+    else:
+        failures.append(f"N={n} <= node_tile={nt} but not a multiple of 8")
+    if failures:
+        n_valid = (((n + nt - 1) // nt) * nt if n > nt
+                   else ((n + 7) // 8) * 8)
+        f_valid = ((f + ft - 1) // ft) * ft
+        e_valid = ((e + granule - 1) // granule) * granule
+        raise ShapeContractError(failures, (n, f, e),
+                                 (n_valid, f_valid, e_valid))
+
+
+def edge_block_ranges(edge_dst: jnp.ndarray, edge_block: int):
+    """Per-edge-block dst range [lo, hi] (int32, [E/EB] each) feeding the
+    degenerate-tile fast path. Computed on the padded arc list; weight-0
+    padding arcs only widen a range — the skip is conservative."""
+    blocks = edge_dst.astype(jnp.int32).reshape(-1, edge_block)
+    return jnp.min(blocks, axis=1), jnp.max(blocks, axis=1)
+
+
+def _agg_kernel(lo_ref, hi_ref, src_ref, dst_ref, w_ref, inv_ref, h_ref,
+                out_ref, *, edge_block: int, stream: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    src = src_ref[...]                       # [EB] int32
-    dst = dst_ref[...]                       # [EB] int32
-    w = w_ref[...].astype(jnp.float32)       # [EB]
+    src_all = src_ref[...]                   # [EB*S] int32
+    dst_all = dst_ref[...]                   # [EB*S] int32
+    w_all = w_ref[...].astype(jnp.float32)   # [EB*S]
     h = h_ref[...]                           # [N, FT] full gather column
-    nt, ebs = out_ref.shape[0], src.shape[0]
-    # gather source rows: [EB, FT]
-    gathered = jnp.take(h, src, axis=0).astype(jnp.float32)
-    # masked one-hot scatter for THIS node tile:
-    # S[i, e] = w[e] * (dst[e] == tile_start + i)  -> [NT, EB]
-    rows = (jax.lax.broadcasted_iota(jnp.int32, (nt, ebs), 0)
-            + pl.program_id(0) * nt)
-    scatter = jnp.where(rows == dst[None, :], w[None, :], 0.0)
-    out_ref[...] += jax.lax.dot(scatter, gathered,
-                                preferred_element_type=jnp.float32)
+    nt = out_ref.shape[0]
+    tile_lo = pl.program_id(0) * nt
 
-    @pl.when(eb == pl.num_programs(2) - 1)
+    for s in range(stream):                  # unrolled sub-blocks
+        blk = sb * stream + s
+        lo = lo_ref[blk]
+        hi = hi_ref[blk]
+
+        # degenerate-tile fast path: skip the gather + one-hot matmul when
+        # this sub-block's dst range misses the node tile entirely
+        @pl.when(jnp.logical_and(hi >= tile_lo, lo < tile_lo + nt))
+        def _compute(s=s):
+            src = src_all[s * edge_block:(s + 1) * edge_block]
+            dst = dst_all[s * edge_block:(s + 1) * edge_block]
+            w = w_all[s * edge_block:(s + 1) * edge_block]
+            # gather source rows: [EB, FT]
+            gathered = jnp.take(h, src, axis=0).astype(jnp.float32)
+            # masked one-hot scatter for THIS node tile:
+            # S[i, e] = w[e] * (dst[e] == tile_start + i)  -> [NT, EB]
+            rows = (jax.lax.broadcasted_iota(jnp.int32, (nt, edge_block), 0)
+                    + tile_lo)
+            scatter = jnp.where(rows == dst[None, :], w[None, :], 0.0)
+            out_ref[...] += jax.lax.dot(scatter, gathered,
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(sb == pl.num_programs(2) - 1)
     def _epilogue():
         out_ref[...] = out_ref[...] * inv_ref[...].astype(jnp.float32)[:, None]
 
@@ -101,70 +198,77 @@ def _edge_dot_kernel(a_ref, b_ref, out_ref):
                             * b_ref[...].astype(jnp.float32), axis=1)
 
 
-def _node_tile(n: int) -> int:
-    return n if n <= NODE_TILE else NODE_TILE
+def _node_tile(n: int, node_tile: int) -> int:
+    return n if n <= node_tile else node_tile
 
 
 def _aggregate(h, edge_src, edge_dst, edge_weight, inv_scale, *,
-               interpret: bool) -> jnp.ndarray:
+               interpret: bool, config: KernelConfig) -> jnp.ndarray:
     """Aligned-domain forward: one pallas_call, f32 accumulate + epilogue."""
     n, f = h.shape
     e = edge_src.shape[0]
-    nt = _node_tile(n)
-    grid = (n // nt, f // FEAT_TILE, e // EDGE_BLOCK)
+    nt = _node_tile(n, config.node_tile)
+    eb, ft_sz, stream = config.edge_block, config.feat_tile, config.stream
+    ft_sz = min(ft_sz, f)
+    granule = eb * stream
+    grid = (n // nt, f // ft_sz, e // granule)
+    lo, hi = edge_block_ranges(edge_dst, eb)
     out = pl.pallas_call(
-        _agg_kernel,
+        functools.partial(_agg_kernel, edge_block=eb, stream=stream),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((EDGE_BLOCK,), lambda i, ft, eb: (eb,)),
-            pl.BlockSpec((EDGE_BLOCK,), lambda i, ft, eb: (eb,)),
-            pl.BlockSpec((EDGE_BLOCK,), lambda i, ft, eb: (eb,)),
-            pl.BlockSpec((nt,), lambda i, ft, eb: (i,)),
-            pl.BlockSpec((n, FEAT_TILE), lambda i, ft, eb: (0, ft)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # lo
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # hi
+            pl.BlockSpec((granule,), lambda i, ft, sb: (sb,)),
+            pl.BlockSpec((granule,), lambda i, ft, sb: (sb,)),
+            pl.BlockSpec((granule,), lambda i, ft, sb: (sb,)),
+            pl.BlockSpec((nt,), lambda i, ft, sb: (i,)),
+            pl.BlockSpec((n, ft_sz), lambda i, ft, sb: (0, ft)),
         ],
-        out_specs=pl.BlockSpec((nt, FEAT_TILE), lambda i, ft, eb: (i, ft)),
+        out_specs=pl.BlockSpec((nt, ft_sz), lambda i, ft, sb: (i, ft)),
         out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
         interpret=interpret,
-    )(edge_src, edge_dst, edge_weight, inv_scale, h)
+    )(lo, hi, edge_src, edge_dst, edge_weight, inv_scale, h)
     return out.astype(h.dtype)
 
 
-def _edge_dot(a, b, *, interpret: bool) -> jnp.ndarray:
+def _edge_dot(a, b, *, interpret: bool, config: KernelConfig) -> jnp.ndarray:
     """Per-edge row dot <a[e, :], b[e, :]> -> [E], f32, feature-tiled."""
     e, f = a.shape
-    grid = (e // EDGE_BLOCK, f // FEAT_TILE)
+    eb, ft_sz = config.edge_block, min(config.feat_tile, f)
+    grid = (e // eb, f // ft_sz)
     return pl.pallas_call(
         _edge_dot_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((EDGE_BLOCK, FEAT_TILE), lambda eb, ft: (eb, ft)),
-            pl.BlockSpec((EDGE_BLOCK, FEAT_TILE), lambda eb, ft: (eb, ft)),
+            pl.BlockSpec((eb, ft_sz), lambda i, ft: (i, ft)),
+            pl.BlockSpec((eb, ft_sz), lambda i, ft: (i, ft)),
         ],
-        out_specs=pl.BlockSpec((EDGE_BLOCK,), lambda eb, ft: (eb,)),
+        out_specs=pl.BlockSpec((eb,), lambda i, ft: (i,)),
         out_shape=jax.ShapeDtypeStruct((e,), jnp.float32),
         interpret=interpret,
     )(a, b)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _aggregate_diff(interpret, h, edge_src, edge_dst, edge_weight,
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _aggregate_diff(interpret, config, h, edge_src, edge_dst, edge_weight,
                     inv_scale, src_perm):
     # src_perm is only consumed by the backward pass; in the primal it is an
     # unused parameter, so XLA dead-code-eliminates the argsort that feeds it
     # whenever the call is not differentiated.
     del src_perm
     return _aggregate(h, edge_src, edge_dst, edge_weight, inv_scale,
-                      interpret=interpret)
+                      interpret=interpret, config=config)
 
 
-def _aggregate_diff_fwd(interpret, h, edge_src, edge_dst, edge_weight,
-                        inv_scale, src_perm):
+def _aggregate_diff_fwd(interpret, config, h, edge_src, edge_dst,
+                        edge_weight, inv_scale, src_perm):
     out = _aggregate(h, edge_src, edge_dst, edge_weight, inv_scale,
-                     interpret=interpret)
+                     interpret=interpret, config=config)
     return out, (h, edge_src, edge_dst, edge_weight, inv_scale, src_perm)
 
 
-def _aggregate_diff_bwd(interpret, res, g):
+def _aggregate_diff_bwd(interpret, config, res, g):
     h, src, dst, w, inv, perm = res
     g32 = g.astype(jnp.float32)
     ones = jnp.ones((h.shape[0],), jnp.float32)
@@ -172,12 +276,12 @@ def _aggregate_diff_bwd(interpret, res, g):
     # (src-sorted) arc list, normalization folded into the reverse weights.
     rev_w = jnp.take(w.astype(jnp.float32) * jnp.take(inv, dst), perm)
     dh = _aggregate(g32, jnp.take(dst, perm), jnp.take(src, perm), rev_w,
-                    ones, interpret=interpret).astype(h.dtype)
+                    ones, interpret=interpret, config=config).astype(h.dtype)
     # w-cotangent: per-edge row dot of h[src] with the scaled cotangent rows.
     g_scaled = g32 * inv.astype(jnp.float32)[:, None]
     dw = _edge_dot(jnp.take(h.astype(jnp.float32), src, axis=0),
                    jnp.take(g_scaled, dst, axis=0),
-                   interpret=interpret).astype(w.dtype)
+                   interpret=interpret, config=config).astype(w.dtype)
     zero_int = lambda x: np.zeros(x.shape, jax.dtypes.float0)
     # inv_scale is graph structure (degree normalization): zero by design.
     return (dh, zero_int(src), zero_int(dst), dw, jnp.zeros_like(inv),
@@ -187,12 +291,14 @@ def _aggregate_diff_bwd(interpret, res, g):
 _aggregate_diff.defvjp(_aggregate_diff_fwd, _aggregate_diff_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("num_nodes", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("num_nodes", "interpret", "config"))
 def csr_aggregate_pallas(h: jnp.ndarray, edge_src: jnp.ndarray,
                          edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
                          num_nodes: int, interpret: bool = True,
                          inv_scale: jnp.ndarray | None = None,
-                         src_perm: jnp.ndarray | None = None
+                         src_perm: jnp.ndarray | None = None,
+                         config: KernelConfig | None = None
                          ) -> jnp.ndarray:
     """Pallas path. h: [N, F] -> [N, F] (f32 accumulate, cast back).
 
@@ -203,19 +309,25 @@ def csr_aggregate_pallas(h: jnp.ndarray, edge_src: jnp.ndarray,
     graph structure (zero cotangent). ``src_perm`` (default
     ``argsort(edge_src)``, dead-code-eliminated unless differentiated)
     orders the reversed arc list for the transpose pass of the VJP.
+    ``config`` (default: the fixed PR 4 tile point) selects the tuned tile
+    sizes and stream factor — resolve one with
+    :func:`repro.kernels.autotune.get_config`.
 
     Inputs are padded by :func:`repro.kernels.ops.csr_aggregate`; this
-    function requires F % FEAT_TILE == 0, E % EDGE_BLOCK == 0, and
-    N % 8 == 0 when N <= NODE_TILE else N % NODE_TILE == 0.
+    function requires F % feat_tile == 0, E % (edge_block*stream) == 0, and
+    N % 8 == 0 when N <= node_tile else N % node_tile == 0 — violations
+    raise :class:`ShapeContractError` naming the failed constraint and the
+    nearest valid padded shape.
     """
+    if config is None:
+        config = DEFAULT_CONFIG
     n, f = h.shape
     e = edge_src.shape[0]
-    assert (n == num_nodes and f % FEAT_TILE == 0 and e % EDGE_BLOCK == 0
-            and (n % NODE_TILE == 0 if n > NODE_TILE else n % 8 == 0)), \
-        (n, f, e)
+    check_shape_contract(n, f, e, num_nodes, config)
     if inv_scale is None:
         inv_scale = jnp.ones((n,), jnp.float32)
     if src_perm is None:
         src_perm = jnp.argsort(edge_src)
-    return _aggregate_diff(interpret, h, edge_src, edge_dst, edge_weight,
-                           inv_scale.astype(jnp.float32), src_perm)
+    return _aggregate_diff(interpret, config, h, edge_src, edge_dst,
+                           edge_weight, inv_scale.astype(jnp.float32),
+                           src_perm)

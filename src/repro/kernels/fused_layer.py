@@ -1,0 +1,258 @@
+"""Pallas TPU kernel: one fused GNN layer — aggregate + dense + bias + relu
+in a single ``pallas_call``, with a custom VJP so it is a real training path.
+
+Why fuse (DESIGN.md §14): the PR 4 kernel computes the aggregate, writes it
+to HBM, and XLA then reads it back for the dense transform — one full
+[N, F] round trip plus a second kernel launch per layer. This kernel keeps
+the aggregate tile in VMEM and runs the dense epilogue on it while it is
+still resident, following the fused-epilogue idiom of
+``kernels/flash_decode.py`` (accumulator scratch + ``pl.when`` init/finish
+on the streaming grid dimension):
+
+    grid = (node tiles i, feature tiles ft, edge granules sb); sb fastest
+    per (i, ft):   agg[i, ft] = Σ_sb onehot-matmul(edge granule sb)
+    at last sb:    agg[i, ft] *= inv[i]                  # mean epilogue
+                   zacc[i]   += agg[i, ft] @ W[ft, :]    # dense, FT-chunked
+    at last (ft):  out[i] = relu(zacc[i] + b)            # bias + act
+
+``zacc`` ([NT, FO] f32 scratch) persists across grid steps (Pallas scratch
+semantics), so the dense transform is accumulated feature-tile by
+feature-tile without the aggregate ever leaving VMEM. The aggregate is
+*also* written out — the backward pass needs it for dW, and XLA
+dead-code-eliminates the store on forward-only calls. The edge streaming
+and the degenerate-tile skip are shared with
+:mod:`repro.kernels.csr_aggregate` (same SMEM lo/hi fast path).
+
+Backward: with A the weighted adjacency, ``agg = diag(inv)·A·h``,
+``z = agg@W + b``, ``out = act(z)``:
+
+    gz  = g ⊙ 1[out > 0]          (relu; identity otherwise)
+    db  = Σ_rows gz
+    dW  = aggᵀ @ gz               (XLA matmul over the saved aggregate)
+    da  = gz @ Wᵀ
+    dh  = Aᵀ·diag(inv)·da         — the transpose-aggregation kernel
+    dw[e] = inv[dst[e]]·<da[dst[e]], h[src[e]]>  — the edge-dot kernel
+
+i.e. the reverse pass reuses the PR 4 kernels (`_aggregate`, `_edge_dot`)
+with the same KernelConfig, so tuned tiles apply to both directions.
+
+:func:`fused_gcn_reference` is the jnp composition of the same math — the
+parity oracle in tests AND the ``"xla"`` strategy the autotuner picks on
+backends where Pallas would run in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .autotune import KernelConfig
+from .csr_aggregate import (DEFAULT_CONFIG, ShapeContractError, _aggregate,
+                            _edge_dot, _node_tile, check_shape_contract,
+                            edge_block_ranges)
+
+LANES = 128
+
+
+def fused_gcn_reference(h, edge_src, edge_dst, edge_weight, inv_scale,
+                        w, b, activate: bool = True) -> jnp.ndarray:
+    """jnp composition of the fused layer: oracle + the "xla" strategy."""
+    n = h.shape[0]
+    msgs = (jnp.take(h, edge_src, axis=0).astype(jnp.float32)
+            * edge_weight.astype(jnp.float32)[:, None])
+    agg = jax.ops.segment_sum(msgs, edge_dst, num_segments=n)
+    agg = agg * inv_scale.astype(jnp.float32)[:, None]
+    z = agg @ w.astype(jnp.float32) + b.astype(jnp.float32)[None, :]
+    # jax.nn.relu, NOT jnp.maximum: their values agree but their gradients
+    # at z == 0 differ (relu' = 0 vs maximum's 0.5 tie split) — and z == 0
+    # is exact for zero-degree rows under zero-initialized biases. The
+    # kernel VJP's (out > 0) mask follows the relu convention.
+    out = jax.nn.relu(z) if activate else z
+    return out.astype(h.dtype)
+
+
+def _fused_kernel(lo_ref, hi_ref, src_ref, dst_ref, w_ref, inv_ref, h_ref,
+                  wmat_ref, b_ref, agg_ref, out_ref, zacc_ref, *,
+                  edge_block: int, stream: int, activate: bool):
+    ftid = pl.program_id(1)
+    sb = pl.program_id(2)
+    num_ft = pl.num_programs(1)
+    last_sb = sb == pl.num_programs(2) - 1
+
+    @pl.when(sb == 0)
+    def _init():
+        agg_ref[...] = jnp.zeros_like(agg_ref)
+
+    src_all = src_ref[...]
+    dst_all = dst_ref[...]
+    w_all = w_ref[...].astype(jnp.float32)
+    h = h_ref[...]
+    nt = agg_ref.shape[0]
+    tile_lo = pl.program_id(0) * nt
+
+    for s in range(stream):                  # unrolled streamed sub-blocks
+        blk = sb * stream + s
+        lo = lo_ref[blk]
+        hi = hi_ref[blk]
+
+        @pl.when(jnp.logical_and(hi >= tile_lo, lo < tile_lo + nt))
+        def _compute(s=s):
+            src = src_all[s * edge_block:(s + 1) * edge_block]
+            dst = dst_all[s * edge_block:(s + 1) * edge_block]
+            w = w_all[s * edge_block:(s + 1) * edge_block]
+            gathered = jnp.take(h, src, axis=0).astype(jnp.float32)
+            rows = (jax.lax.broadcasted_iota(jnp.int32, (nt, edge_block), 0)
+                    + tile_lo)
+            scatter = jnp.where(rows == dst[None, :], w[None, :], 0.0)
+            agg_ref[...] += jax.lax.dot(scatter, gathered,
+                                        preferred_element_type=jnp.float32)
+
+    # fused epilogue: normalization, then the dense transform on the still-
+    # resident aggregate tile (zacc accumulates over feature tiles), then
+    # bias + activation once the last feature tile lands.
+    @pl.when(last_sb)
+    def _normalize():
+        agg_ref[...] = (agg_ref[...]
+                        * inv_ref[...].astype(jnp.float32)[:, None])
+
+    @pl.when(jnp.logical_and(last_sb, ftid == 0))
+    def _zacc_init():
+        zacc_ref[...] = jnp.zeros_like(zacc_ref)
+
+    @pl.when(last_sb)
+    def _dense():
+        zacc_ref[...] += jax.lax.dot(
+            agg_ref[...], wmat_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(last_sb, ftid == num_ft - 1))
+    def _finish():
+        z = zacc_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        out_ref[...] = jnp.maximum(z, 0.0) if activate else z
+
+
+def _fused_forward(h, edge_src, edge_dst, edge_weight, inv_scale, wmat, b,
+                   *, activate: bool, interpret: bool, config: KernelConfig):
+    """Aligned-domain fused layer: returns (out [N, FO], agg [N, F])."""
+    n, f = h.shape
+    e = edge_src.shape[0]
+    fo = wmat.shape[1]
+    nt = _node_tile(n, config.node_tile)
+    eb, stream = config.edge_block, config.stream
+    ft_sz = min(config.feat_tile, f)
+    granule = eb * stream
+    grid = (n // nt, f // ft_sz, e // granule)
+    lo, hi = edge_block_ranges(edge_dst, eb)
+    agg, out = pl.pallas_call(
+        functools.partial(_fused_kernel, edge_block=eb, stream=stream,
+                          activate=activate),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # lo
+            pl.BlockSpec(memory_space=pltpu.SMEM),    # hi
+            pl.BlockSpec((granule,), lambda i, ft, sb: (sb,)),
+            pl.BlockSpec((granule,), lambda i, ft, sb: (sb,)),
+            pl.BlockSpec((granule,), lambda i, ft, sb: (sb,)),
+            pl.BlockSpec((nt,), lambda i, ft, sb: (i,)),
+            pl.BlockSpec((n, ft_sz), lambda i, ft, sb: (0, ft)),
+            pl.BlockSpec((ft_sz, fo), lambda i, ft, sb: (ft, 0)),
+            pl.BlockSpec((fo,), lambda i, ft, sb: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nt, ft_sz), lambda i, ft, sb: (i, ft)),
+            pl.BlockSpec((nt, fo), lambda i, ft, sb: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, f), jnp.float32),
+            jax.ShapeDtypeStruct((n, fo), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nt, fo), jnp.float32)],
+        interpret=interpret,
+    )(lo, hi, edge_src, edge_dst, edge_weight, inv_scale, h, wmat, b)
+    return out, agg
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _fused_diff(interpret, activate, config, h, edge_src, edge_dst,
+                edge_weight, inv_scale, wmat, b, src_perm):
+    del src_perm                     # bwd-only (see csr_aggregate)
+    out, _ = _fused_forward(h, edge_src, edge_dst, edge_weight, inv_scale,
+                            wmat, b, activate=activate, interpret=interpret,
+                            config=config)
+    return out
+
+
+def _fused_diff_fwd(interpret, activate, config, h, edge_src, edge_dst,
+                    edge_weight, inv_scale, wmat, b, src_perm):
+    out, agg = _fused_forward(h, edge_src, edge_dst, edge_weight, inv_scale,
+                              wmat, b, activate=activate,
+                              interpret=interpret, config=config)
+    return out, (h, edge_src, edge_dst, edge_weight, inv_scale, wmat,
+                 src_perm, agg, out)
+
+
+def _fused_diff_bwd(interpret, activate, config, res, g):
+    h, src, dst, w, inv, wmat, perm, agg, out = res
+    gz = g.astype(jnp.float32)
+    if activate:
+        gz = gz * (out > 0.0)
+    db = jnp.sum(gz, axis=0)
+    dwmat = agg.T @ gz                                   # [F, FO]
+    da = gz @ wmat.astype(jnp.float32).T                 # [N, F]
+    ones = jnp.ones((h.shape[0],), jnp.float32)
+    # dh: transpose aggregation over the reversed src-sorted arc list,
+    # normalization folded into the reverse weights (PR 4 kernel, same cfg).
+    rev_w = jnp.take(w.astype(jnp.float32) * jnp.take(inv, dst), perm)
+    dh = _aggregate(da, jnp.take(dst, perm), jnp.take(src, perm), rev_w,
+                    ones, interpret=interpret, config=config).astype(h.dtype)
+    da_scaled = da * inv.astype(jnp.float32)[:, None]
+    dw = _edge_dot(jnp.take(h.astype(jnp.float32), src, axis=0),
+                   jnp.take(da_scaled, dst, axis=0),
+                   interpret=interpret, config=config).astype(w.dtype)
+    zero_int = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (dh, zero_int(src), zero_int(dst), dw, jnp.zeros_like(inv),
+            dwmat.astype(wmat.dtype), db, zero_int(perm))
+
+
+_fused_diff.defvjp(_fused_diff_fwd, _fused_diff_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("num_nodes", "activate",
+                                             "interpret", "config"))
+def fused_gcn_pallas(h: jnp.ndarray, edge_src: jnp.ndarray,
+                     edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
+                     num_nodes: int, wmat: jnp.ndarray, b: jnp.ndarray,
+                     activate: bool = True, interpret: bool = True,
+                     inv_scale: jnp.ndarray | None = None,
+                     src_perm: jnp.ndarray | None = None,
+                     config: KernelConfig | None = None) -> jnp.ndarray:
+    """Aligned-domain fused GNN layer (one pallas_call; see module doc).
+
+    ``out = act((inv_scale ⊙ Σ_e w[e]·h[src[e]]→dst[e]) @ wmat + b)``.
+    Differentiable w.r.t. ``h``, ``edge_weight``, ``wmat``, ``b``. Shape
+    contract: the csr_aggregate contract plus FO % 128 == 0 (lane multiple
+    of the resident output tile); :func:`repro.kernels.ops.fused_gcn_layer`
+    applies the padding automatically.
+    """
+    if config is None:
+        config = DEFAULT_CONFIG
+    n, f = h.shape
+    e = edge_src.shape[0]
+    fo = wmat.shape[1]
+    check_shape_contract(n, f, e, num_nodes, config)
+    if fo % LANES != 0:
+        raise ShapeContractError(
+            [f"FO={fo} not a multiple of {LANES} (output lane tile)"],
+            (n, f, e), (n, f, e))
+    if inv_scale is None:
+        inv_scale = jnp.ones((n,), jnp.float32)
+    if src_perm is None:
+        src_perm = jnp.argsort(edge_src)
+    return _fused_diff(interpret, activate, config, h, edge_src, edge_dst,
+                       edge_weight, inv_scale.astype(jnp.float32), wmat, b,
+                       src_perm)

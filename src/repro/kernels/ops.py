@@ -5,12 +5,18 @@ On CPU (this container) the kernels execute in interpret mode; on TPU set
 
 **Padding contract** (the single contract for every aggregation path — the
 jnp segment-sum in :mod:`repro.gnn.layers`, the oracle in
-:mod:`repro.kernels.ref`, and the Pallas kernel): *padding arcs carry weight
-0 and may point at any in-range row; zero weight is what makes them no-ops,
-not where they park.* By convention :mod:`repro.core.assemble` parks its
-padding arcs at row ``n_pad - 1`` (keeps ``edge_dst`` sorted), while the
-alignment padding added here points at row 0 — both are no-ops on both
-paths, which ``tests/test_kernels.py`` pins.
+:mod:`repro.kernels.ref`, and the Pallas kernels): *padding arcs carry
+weight 0 and may point at any in-range row; zero weight is what makes them
+no-ops, not where they park.* By convention :mod:`repro.core.assemble`
+parks its padding arcs at row ``n_pad - 1`` (keeps ``edge_dst`` sorted),
+while the alignment padding added here points at row 0 — both are no-ops on
+both paths, which ``tests/test_kernels.py`` pins.
+
+**Strategy dispatch** (DESIGN.md §14): the tiling/strategy choice lives in
+a :class:`repro.kernels.autotune.KernelConfig`, resolved per (backend,
+shape-bucket) by :func:`repro.kernels.autotune.get_config` and threaded
+through these wrappers as a *static* jit argument — never read from module
+state inside a jit, so a cache update can never serve a stale compile.
 """
 from __future__ import annotations
 
@@ -19,9 +25,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .csr_aggregate import (EDGE_BLOCK, FEAT_TILE, NODE_TILE,
+from .autotune import KernelConfig
+from .csr_aggregate import (DEFAULT_CONFIG, EDGE_BLOCK, FEAT_TILE, NODE_TILE,
                             csr_aggregate_pallas)
 from .flash_decode import flash_decode_pallas
+from .fused_layer import LANES, fused_gcn_pallas, fused_gcn_reference
 
 
 def _on_tpu() -> bool:
@@ -38,11 +46,33 @@ def _pad_to(x: jnp.ndarray, mult: int, axis: int, value=0) -> jnp.ndarray:
     return jnp.pad(x, pads, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("num_nodes", "interpret"))
+def _pad_graph(h, edge_src, edge_dst, edge_weight, inv_scale,
+               config: KernelConfig):
+    """Pad (h, arcs, inv) to the config's tile contract. Alignment arcs
+    carry weight 0 and park at row 0 — a no-op per the padding contract."""
+    n = h.shape[0]
+    hp = _pad_to(_pad_to(h, config.feat_tile, 1), 8, 0)
+    if hp.shape[0] > config.node_tile:
+        hp = _pad_to(hp, config.node_tile, 0)
+    n_pad = hp.shape[0]
+    granule = config.edge_granule
+    es = _pad_to(edge_src, granule, 0)
+    ed = _pad_to(edge_dst, granule, 0)
+    ew = _pad_to(edge_weight, granule, 0)
+    inv = None
+    if inv_scale is not None:
+        inv = jnp.pad(inv_scale.astype(jnp.float32), (0, n_pad - n),
+                      constant_values=1.0)
+    return hp, es, ed, ew, inv, n_pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_nodes", "interpret", "config"))
 def csr_aggregate(h: jnp.ndarray, edge_src: jnp.ndarray,
                   edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
                   num_nodes: int, interpret: bool | None = None,
-                  inv_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+                  inv_scale: jnp.ndarray | None = None,
+                  config: KernelConfig | None = None) -> jnp.ndarray:
     """Weighted neighbor-sum via the Pallas kernel, with automatic padding.
 
     Semantics match :func:`repro.kernels.ref.csr_aggregate_ref` exactly;
@@ -55,28 +85,79 @@ def csr_aggregate(h: jnp.ndarray, edge_src: jnp.ndarray,
     arc list — the src-sorted permutation it needs is precomputed here (and
     dead-code-eliminated by XLA on non-differentiated calls). ``inv_scale``
     and the arc lists are graph structure: zero cotangent by design.
+
+    ``config`` picks the tuned tile sizes/stream factor (default: the fixed
+    PR 4 point); its *strategy* field is ignored here — this wrapper is
+    always the Pallas aggregation (strategy dispatch happens one level up,
+    in :func:`repro.gnn.layers.aggregate_mean` / :func:`fused_gcn_layer`).
     """
     if interpret is None:
         interpret = not _on_tpu()
+    if config is None:
+        config = DEFAULT_CONFIG
     n, f = h.shape
-    hp = _pad_to(_pad_to(h, FEAT_TILE, 1), 8, 0)
-    if hp.shape[0] > NODE_TILE:
-        hp = _pad_to(hp, NODE_TILE, 0)
-    n_pad = hp.shape[0]
-    # alignment padding arcs carry weight 0 and park at row 0 — a no-op on
-    # every path per the module-level padding contract
-    es = _pad_to(edge_src, EDGE_BLOCK, 0)
-    ed = _pad_to(edge_dst, EDGE_BLOCK, 0)
-    ew = _pad_to(edge_weight, EDGE_BLOCK, 0)
-    inv = None
-    if inv_scale is not None:
-        inv = jnp.pad(inv_scale.astype(jnp.float32), (0, n_pad - n),
-                      constant_values=1.0)
+    hp, es, ed, ew, inv, n_pad = _pad_graph(
+        h, edge_src, edge_dst, edge_weight, inv_scale, config)
     perm = jnp.argsort(es)           # bwd-only; DCE'd on forward-only calls
     out = csr_aggregate_pallas(hp, es, ed, ew, num_nodes=n_pad,
                                interpret=interpret, inv_scale=inv,
-                               src_perm=perm)
+                               src_perm=perm, config=config)
     return out[:n, :f].astype(h.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activate", "interpret",
+                                             "config"))
+def fused_gcn_layer(h: jnp.ndarray, edge_src: jnp.ndarray,
+                    edge_dst: jnp.ndarray, edge_weight: jnp.ndarray,
+                    in_degree: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                    activate: bool = True, interpret: bool | None = None,
+                    config: KernelConfig | None = None) -> jnp.ndarray:
+    """One fused GNN layer: ``act(mean-aggregate(h) @ w + b)``.
+
+    THE kernel-path entry point for the training modes (DESIGN.md §14):
+    dispatches on ``config.strategy`` —
+
+    - ``"pallas_fused"``: one ``pallas_call`` for the whole layer
+      (:func:`repro.kernels.fused_layer.fused_gcn_pallas`), padding
+      handled here;
+    - ``"pallas"``: the PR 4 aggregation kernel with tuned tiles + an XLA
+      dense epilogue;
+    - ``"xla"``: the jnp composition under this jit (the right answer
+      wherever Pallas would run in interpret mode).
+
+    Differentiable w.r.t. ``h``, ``edge_weight``, ``w``, ``b`` on every
+    strategy; parity across strategies is pinned in
+    ``tests/test_fused_layer.py``.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    if config is None:
+        config = DEFAULT_CONFIG
+    inv = 1.0 / jnp.maximum(in_degree.astype(jnp.float32), 1.0)
+    if config.strategy == "xla":
+        return fused_gcn_reference(h, edge_src, edge_dst, edge_weight, inv,
+                                   w, b, activate=activate)
+    if config.strategy == "pallas":
+        agg = csr_aggregate(h, edge_src, edge_dst, edge_weight,
+                            num_nodes=h.shape[0], interpret=interpret,
+                            inv_scale=inv, config=config)
+        z = (agg.astype(jnp.float32) @ w.astype(jnp.float32)
+             + b.astype(jnp.float32)[None, :])
+        # jax.nn.relu for the gradient-at-zero convention (see fused_layer)
+        out = jax.nn.relu(z) if activate else z
+        return out.astype(h.dtype)
+    # pallas_fused: pad to the full contract (incl. FO lanes), one call.
+    n, f = h.shape
+    fo = w.shape[1]
+    hp, es, ed, ew, invp, n_pad = _pad_graph(
+        h, edge_src, edge_dst, edge_weight, inv, config)
+    wp = _pad_to(jnp.pad(w, ((0, hp.shape[1] - f), (0, 0))), LANES, 1)
+    bp = _pad_to(b, LANES, 0)
+    perm = jnp.argsort(es)
+    out = fused_gcn_pallas(hp, es, ed, ew, num_nodes=n_pad, wmat=wp, b=bp,
+                           activate=activate, interpret=interpret,
+                           inv_scale=invp, src_perm=perm, config=config)
+    return out[:n, :fo].astype(h.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -70,9 +70,15 @@ def _build_parser() -> argparse.ArgumentParser:
                           "(arxiv 2305.09887), ensemble averages embeddings")
     run.add_argument("--model", default="gcn", choices=["gcn", "sage"])
     run.add_argument("--use-kernel", action="store_true",
-                     help="route neighbor aggregation through the Pallas "
-                          "one-hot-matmul kernel (differentiable; interpret "
-                          "mode on CPU, native on TPU — DESIGN.md §3/§11)")
+                     help="route GNN layers through the autotuned kernel "
+                          "dispatcher (fused Pallas layer on TPU, XLA "
+                          "strategy on interpret-mode backends — "
+                          "DESIGN.md §3/§11/§14)")
+    run.add_argument("--kernel-autotune", action="store_true",
+                     help="sweep the kernel tile/strategy search space for "
+                          "this run's shape buckets before training and "
+                          "cache the winners on disk (DESIGN.md §14; "
+                          "no-op without --use-kernel)")
     run.add_argument("--hidden-dim", type=int, default=128)
     run.add_argument("--embed-dim", type=int, default=128)
     run.add_argument("--num-layers", type=int, default=3)
@@ -121,6 +127,7 @@ def _cmd_run(args: argparse.Namespace) -> int:
         scheme=args.scheme, mode=args.mode, sync_period=args.sync_period,
         integrate=args.integrate, model=args.model,
         use_kernel=args.use_kernel,
+        kernel_autotune=args.kernel_autotune,
         hidden_dim=args.hidden_dim, embed_dim=args.embed_dim,
         num_layers=args.num_layers, dropout=args.dropout,
         epochs=args.epochs, lr=args.lr,

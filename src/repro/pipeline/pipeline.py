@@ -50,9 +50,14 @@ class PipelineConfig:
     integrate: str = "none"         # "none" | "model_avg" | "ensemble" —
                                     # aggregate the k models pre-assembly
     model: str = "gcn"              # "gcn" | "sage"
-    use_kernel: bool = False        # aggregate via the Pallas kernel
-                                    # (DESIGN.md §3/§11); differentiable,
-                                    # so both training modes support it
+    use_kernel: bool = False        # route GNN layers through the kernel
+                                    # dispatcher (DESIGN.md §3/§11/§14);
+                                    # differentiable, so every training
+                                    # mode supports it
+    kernel_autotune: bool = False   # sweep the kernel search space for this
+                                    # run's shape buckets before training
+                                    # (cached on disk; implies use_kernel
+                                    # semantics only when use_kernel=True)
     hidden_dim: int = 128
     embed_dim: int = 128
     num_layers: int = 3
@@ -94,6 +99,9 @@ class PipelineReport:
     checkpoint_path: Optional[str] = None
     partition_fingerprint: Optional[str] = None   # spec config fingerprint
     serving_path: Optional[str] = None            # exported serving bundle
+    kernel: Optional[Dict[str, Any]] = None       # resolved KernelConfig per
+                                                  # layer-input width
+                                                  # (use_kernel runs only)
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -118,7 +126,12 @@ class PipelineReport:
         lines.append(f"  assembly     scheme={c['scheme']} "
                      f"n_pad={self.shapes['n_pad']} "
                      f"e_pad={self.shapes['e_pad']} [cache {bhit}]")
-        agg = "pallas-kernel" if c.get("use_kernel") else "jnp"
+        agg = "jnp"
+        if c.get("use_kernel"):
+            strategies = sorted({v["strategy"]
+                                 for v in (self.kernel or {}).values()})
+            agg = "kernel[" + ",".join(strategies) + "]" if strategies \
+                else "pallas-kernel"
         mode = c["mode"]
         if mode == "stale":
             period = c.get("sync_period", 0)
@@ -253,6 +266,24 @@ class Pipeline:
                             embed_dim=cfg.embed_dim,
                             num_layers=cfg.num_layers, dropout=cfg.dropout,
                             use_kernel=cfg.use_kernel)
+        # kernel config resolution/tuning: one bucket per distinct layer
+        # input width at this run's padded partition shape (DESIGN.md §14)
+        kernel_info: Optional[Dict[str, Any]] = None
+        if cfg.use_kernel:
+            from repro.kernels.autotune import autotune as tune_bucket
+            from repro.kernels.autotune import get_config
+            n_pad, e_pad = bundle.batch.n_pad, bundle.batch.e_pad
+            widths = sorted({gnn_cfg.feature_dim, gnn_cfg.hidden_dim})
+            if cfg.kernel_autotune:
+                t_tune = time.time()
+                for width in widths:
+                    chosen, measured = tune_bucket(n_pad, e_pad, width)
+                    log.info("kernel autotune f=%d -> %s (%d candidates)",
+                             width, chosen, len(measured))
+                timings["kernel_autotune"] = time.time() - t_tune
+            kernel_info = {
+                f"f{width}": get_config(n_pad, e_pad, width).as_dict()
+                for width in widths}
         mesh = self._resolve_mesh(bundle.batch.k)
         hlo_out: Optional[Dict[str, str]] = {} if cfg.collect_hlo else None
         if cfg.mode == "local":
@@ -350,4 +381,5 @@ class Pipeline:
             checkpoint_path=checkpoint_path,
             partition_fingerprint=bundle.fingerprint or spec.fingerprint(),
             serving_path=serving_path,
+            kernel=kernel_info,
         )

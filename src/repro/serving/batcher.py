@@ -205,7 +205,8 @@ class ContinuousBatcher:
                 np.zeros((b, e, self.store.num_classes), np.float32),
                 np.zeros((b, self.store.num_classes), np.float32),
                 max_neighbors=self.inductive.max_neighbors,
-                use_kernel=self.inductive.use_kernel)
+                use_kernel=self.inductive.use_kernel,
+                kernel_config=self.inductive.kernel_config(b))
         warmed = sum(self.compiles.warm_compiles.values())
         self.compiles.mark_steady()
         return warmed
@@ -275,7 +276,8 @@ class ContinuousBatcher:
             nb_emb, nb_mask,
             self.store.head_w[pids], self.store.head_b[pids],
             max_neighbors=self.inductive.max_neighbors,
-            use_kernel=self.inductive.use_kernel)
+            use_kernel=self.inductive.use_kernel,
+            kernel_config=self.inductive.kernel_config(b_pad))
         emb, logits = np.asarray(emb), np.asarray(logits)
         degraded = nb_mask.sum(axis=1) == 0
         labels = logits[:len(queries)].argmax(-1)

@@ -6,9 +6,11 @@ neighbors. Instead of failing, the serving layer:
 1. routes the query to the partition owning the *majority* of those
    neighbors (ties break to the smallest pid — deterministic);
 2. aggregates the neighbors' stored embeddings on the fly through the SAME
-   ``aggregate_mean`` primitive the training path uses (`use_kernel=True`
-   runs the PR 4 differentiable Pallas kernel, `False` the jnp
-   segment-sum — bit-identical semantics, pinned by tests);
+   aggregation primitive the training path uses (`use_kernel=True` resolves
+   the autotuned :class:`repro.kernels.autotune.KernelConfig` for the
+   bucket's star-graph shape and threads it into the jit statically —
+   Pallas strategies run the tuned-tile kernel, the XLA strategy the jnp
+   segment-sum; bit-identical semantics, pinned by tests);
 3. runs the owning partition's trained GNN head on the aggregate.
 
 Shapes are fixed per flush bucket — ``[B_pad * (1 + max_neighbors)]`` rows,
@@ -48,9 +50,11 @@ def route_neighbors(partition_of: np.ndarray,
     return int(counts.argmax()), nb
 
 
-@functools.partial(jax.jit, static_argnames=("max_neighbors", "use_kernel"))
+@functools.partial(jax.jit, static_argnames=("max_neighbors", "use_kernel",
+                                             "kernel_config"))
 def _aggregate_and_head(nb_emb, nb_mask, head_w, head_b, *,
-                        max_neighbors: int, use_kernel: bool):
+                        max_neighbors: int, use_kernel: bool,
+                        kernel_config=None):
     """Fixed-shape batched star-graph aggregation + per-query head.
 
     nb_emb: [B, M, E] neighbor embeddings (zero rows where masked)
@@ -63,9 +67,13 @@ def _aggregate_and_head(nb_emb, nb_mask, head_w, head_b, *,
     neighbor row at its query row with the mask as weight, so
     ``aggregate_mean`` lands the masked neighbor mean exactly on rows
     ``[:B]`` on both the jnp and the Pallas path.
-    """
-    from repro.gnn.layers import aggregate_mean
 
+    ``kernel_config`` is the resolved autotuned
+    :class:`repro.kernels.autotune.KernelConfig` for this bucket's star
+    graph — static, so a retune recompiles instead of serving a stale
+    kernel (DESIGN.md §14). ``None`` falls back to trace-time resolution
+    inside ``aggregate_mean``.
+    """
     b, m, e = nb_emb.shape
     assert m == max_neighbors, (m, max_neighbors)
     h = jnp.concatenate(
@@ -76,8 +84,18 @@ def _aggregate_and_head(nb_emb, nb_mask, head_w, head_b, *,
     counts = nb_mask.sum(axis=1)
     in_degree = jnp.concatenate(
         [counts, jnp.ones((b * m,), jnp.float32)], axis=0)
-    agg = aggregate_mean(h, edge_src, edge_dst, weight, in_degree,
-                         use_kernel=use_kernel)[:b]
+    if use_kernel and kernel_config is not None and \
+            kernel_config.uses_pallas:
+        from repro.kernels.ops import csr_aggregate
+        inv = 1.0 / jnp.maximum(in_degree, 1.0)
+        agg = csr_aggregate(h, edge_src, edge_dst, weight,
+                            num_nodes=h.shape[0], inv_scale=inv,
+                            config=kernel_config)[:b]
+    else:
+        from repro.gnn.layers import aggregate_mean
+        agg = aggregate_mean(h, edge_src, edge_dst, weight, in_degree,
+                             use_kernel=use_kernel
+                             and kernel_config is None)[:b]
     logits = jnp.einsum("be,bec->bc", agg, head_w) + head_b
     return agg, logits
 
@@ -93,6 +111,17 @@ class InductiveEngine:
 
     def route(self, neighbors) -> Tuple[int, np.ndarray]:
         return route_neighbors(self.store.partition_of, neighbors)
+
+    def kernel_config(self, b_pad: int):
+        """Autotuned :class:`~repro.kernels.autotune.KernelConfig` for this
+        bucket's star graph ([B·(1+M)] rows, [B·M] arcs, embed_dim wide) —
+        what ``infer`` threads into the jit as a static arg. ``None`` on
+        the jnp path."""
+        if not self.use_kernel:
+            return None
+        from repro.kernels.autotune import get_config
+        m = self.max_neighbors
+        return get_config(b_pad * (1 + m), b_pad * m, self.store.embed_dim)
 
     def prepare(self, neighbor_lists: List[np.ndarray], b_pad: int
                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -123,7 +152,8 @@ class InductiveEngine:
         head_b = jnp.asarray(self.store.head_b)[pids]
         emb, logits = _aggregate_and_head(
             jnp.asarray(nb_emb), jnp.asarray(nb_mask), head_w, head_b,
-            max_neighbors=self.max_neighbors, use_kernel=self.use_kernel)
+            max_neighbors=self.max_neighbors, use_kernel=self.use_kernel,
+            kernel_config=self.kernel_config(b_pad))
         degraded = nb_mask.sum(axis=1) == 0
         return np.asarray(emb), np.asarray(logits), degraded
 

@@ -181,13 +181,36 @@ def test_padding_contract_zero_weight_arcs_noop_on_both_paths():
 
 def test_aggregate_mean_kernel_path_is_one_fused_call():
     """Degree normalization is fused into the kernel epilogue: the kernel
-    path's jaxpr contains exactly one pallas_call."""
+    path's jaxpr contains exactly one pallas_call (pallas strategy forced —
+    on interpret-mode backends the autotuner resolves to "xla")."""
     from repro.gnn.layers import aggregate_mean
+    from repro.kernels.autotune import KernelConfig, override
     h, src, dst, w = _random_csr(0, 16, 8, 24)
     deg = jnp.ones((16,))
-    jaxpr = str(jax.make_jaxpr(
-        lambda h: aggregate_mean(h, src, dst, w, deg, use_kernel=True))(h))
+    with override(KernelConfig(strategy="pallas")):
+        jaxpr = str(jax.make_jaxpr(
+            lambda h: aggregate_mean(h, src, dst, w, deg,
+                                     use_kernel=True))(h))
     assert jaxpr.count("pallas_call") == 1
+
+
+def test_aggregate_mean_kernel_path_xla_strategy_has_no_pallas_call():
+    """On backends where the autotuner resolves to the "xla" strategy the
+    kernel path must lower with NO interpret-mode pallas_call — same math,
+    no emulator (DESIGN.md §14)."""
+    from repro.gnn.layers import aggregate_mean
+    from repro.kernels.autotune import KernelConfig, override
+    h, src, dst, w = _random_csr(0, 16, 8, 24)
+    deg = jnp.ones((16,))
+    with override(KernelConfig(strategy="xla")):
+        jaxpr = str(jax.make_jaxpr(
+            lambda h: aggregate_mean(h, src, dst, w, deg,
+                                     use_kernel=True))(h))
+        out = aggregate_mean(h, src, dst, w, deg, use_kernel=True)
+    assert jaxpr.count("pallas_call") == 0
+    ref = aggregate_mean(h, src, dst, w, deg, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

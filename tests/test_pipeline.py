@@ -257,8 +257,13 @@ def test_pipeline_use_kernel_trains_and_matches_jnp_path(tmp_path, karate):
     rep_k = Pipeline(cfg(True)).run(karate)
     rep_j = Pipeline(cfg(False)).run(karate)
     assert rep_k.config["use_kernel"] is True
-    assert "aggregation=pallas-kernel" in rep_k.summary()
+    # the summary names the resolved per-width strategies (DESIGN.md §14)
+    assert "aggregation=kernel[" in rep_k.summary()
+    assert rep_k.kernel, "resolved KernelConfigs must land in the report"
+    for entry in rep_k.kernel.values():
+        assert entry["strategy"] in ("pallas_fused", "pallas", "xla")
     assert "aggregation=jnp" in rep_j.summary()
+    assert rep_j.kernel is None
     assert rep_k.collectives["total"] == 0    # kernel path stays local-only
     assert abs(rep_k.accuracy["test"] - rep_j.accuracy["test"]) <= 0.35
     for split in ("train", "val", "test"):
