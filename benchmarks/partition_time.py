@@ -14,19 +14,36 @@ gate: one ``leiden_fusion`` run at k=8 plus the partition-quality
 guarantees, failing loudly if a Python-loop regression sneaks back into the
 engine.
 
+``--out-of-core`` exercises the mmap GraphStore path instead (DESIGN.md
+§15): generation streams a ``--nodes``-node graph (default 10^6) straight
+to a chunked CSR bundle on disk, leiden_fusion partitions it
+chunk-by-chunk, and every row additionally records ``peak_rss_mb`` — the
+process peak resident set at row completion — so the trajectory shows the
+RAM the out-of-core path actually held while the in-RAM path at the same
+``n`` would have materialized the full edge list.
+
 Besides the CSV block, every run appends its rows to
 ``benchmarks/artifacts/BENCH_partition_time.json`` (method, k, n, seconds,
-timestamp), so the perf trajectory accumulates across runs.
+timestamp; out-of-core rows add peak_rss_mb), so the perf trajectory
+accumulates across runs.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import resource
 import time
 
 from .common import ARTIFACTS, append_bench_json, arxiv_like, emit
 
 BENCH_JSON = os.path.join(ARTIFACTS, "BENCH_partition_time.json")
+STREAM_DIR = os.path.join(ARTIFACTS, "streamed")
+
+
+def _peak_rss_mb() -> float:
+    """Process high-water resident set in MB (ru_maxrss is KB on Linux)."""
+    return round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024,
+                 1)
 
 
 def run(fast: bool = True, scale: float = 1.0, all_methods: bool = False,
@@ -83,6 +100,44 @@ def _smoke_check(g, k: int, labels) -> None:
           f"balance={rep.node_balance:.2f}")
 
 
+def run_out_of_core(nodes: int = 1_000_000, smoke: bool = False,
+                    out_dir: str | None = None):
+    """Stream-generate a ``nodes``-node graph to a chunked mmap CSR bundle
+    and partition it out-of-core, recording wall time and peak RSS per row.
+    """
+    from repro.core import evaluate_partition, partition_from_spec
+    from repro.pipeline.datasets import make_arxiv_like_stream
+
+    out_dir = out_dir or os.path.join(STREAM_DIR, f"arxiv-n{nodes}")
+    ks = (8,) if smoke else (8, 16)
+    rows = []
+    t0 = time.time()
+    ds = make_arxiv_like_stream(out_dir=out_dir, n=nodes, seed=0)
+    g = ds.graph
+    rows.append({"method": "stream_generate", "k": 0, "n": g.n,
+                 "time_s": round(time.time() - t0, 3),
+                 "peak_rss_mb": _peak_rss_mb()})
+    print(f"# streamed bundle: {g!r}")
+    labels = None
+    for k in ks:
+        res = partition_from_spec(g, "leiden_fusion", k, seed=0)
+        rows.append({"method": "leiden_fusion[out-of-core]", "k": k,
+                     "n": g.n, "time_s": round(res.seconds, 3),
+                     "peak_rss_mb": _peak_rss_mb()})
+        labels = res.labels
+    emit("table3_partition_time_ooc", rows)
+    append_bench_json(BENCH_JSON, rows)
+    if smoke:
+        _smoke_check(g, ks[-1], labels)
+    else:
+        rep = evaluate_partition(g, labels)
+        print(f"# out-of-core quality: cut={rep.edge_cut_pct:.1f}% "
+              f"components={rep.total_components} "
+              f"isolated={rep.total_isolated} "
+              f"balance={rep.node_balance:.2f}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scale", type=float, default=1.0,
@@ -92,8 +147,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI perf gate: leiden_fusion k=8 only, plus the "
                          "partition-quality guarantees")
+    ap.add_argument("--out-of-core", action="store_true",
+                    help="stream a --nodes graph to a mmap CSR bundle and "
+                         "partition it chunk-by-chunk, recording peak RSS "
+                         "per row (DESIGN.md §15)")
+    ap.add_argument("--nodes", type=int, default=1_000_000,
+                    help="node count for --out-of-core runs")
     args = ap.parse_args()
-    run(scale=args.scale, all_methods=args.all_methods, smoke=args.smoke)
+    if args.out_of_core:
+        run_out_of_core(nodes=args.nodes, smoke=args.smoke)
+    else:
+        run(scale=args.scale, all_methods=args.all_methods, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,12 @@
 """Core — the paper's contribution: Leiden-Fusion partitioning."""
-from .engine import (CommunityState, QuotientEdges, connected_components,
+from .engine import (ArcChunk, CommunityState, QuotientEdges,
+                     connected_components, connected_components_chunks,
                      quotient_edges, split_components)
 from .graph import Graph, NodeDataset, karate_club, make_arxiv_like, make_proteins_like
+from .graphstore import (STORE_FORMAT_VERSION, GraphStoreError,
+                         GraphStoreIntegrityError, MmapGraphStore,
+                         atomic_directory, build_store_from_edge_batches,
+                         store_from_graph)
 from .leiden import leiden
 from .fusion import fuse, leiden_fusion, community_cuts
 from .registry import (Capabilities, FusionConfig, NullConfig, Partitioner,
@@ -23,8 +28,12 @@ from .assemble import (INTEGRATION_KINDS, PartitionBatch, HaloExchangeSpec,
 
 __all__ = [
     # the vectorized partitioning engine (DESIGN.md §10)
-    "CommunityState", "QuotientEdges", "connected_components",
-    "quotient_edges", "split_components",
+    "ArcChunk", "CommunityState", "QuotientEdges", "connected_components",
+    "connected_components_chunks", "quotient_edges", "split_components",
+    # the out-of-core GraphStore backend (DESIGN.md §15)
+    "STORE_FORMAT_VERSION", "GraphStoreError", "GraphStoreIntegrityError",
+    "MmapGraphStore", "atomic_directory", "build_store_from_edge_batches",
+    "store_from_graph",
     "Graph", "NodeDataset", "karate_club", "make_arxiv_like",
     "make_proteins_like", "leiden", "fuse", "leiden_fusion", "community_cuts",
     # partitioner API v2

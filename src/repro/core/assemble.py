@@ -46,6 +46,80 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def _partition_lists_chunked(g, labels: np.ndarray, k: int, scheme: str
+                             ) -> Tuple[List[np.ndarray], List[np.ndarray],
+                                        List[Tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray]]]:
+    """Out-of-core body of :func:`build_partition_batch`: the same
+    per-partition node/arc lists, accumulated over ``iter_csr_chunks()``
+    sweeps. Chunk pieces concatenate in global arc order and the final
+    per-partition sort is the same stable dst-sort, so the assembled lists
+    match the in-RAM path element for element. Local ids are kept int32
+    (they index into the padded batch, which is int32 anyway), so peak RAM
+    is the kept arcs at half the in-RAM width plus O(n) per partition for
+    the remap."""
+    n = g.n
+    # halo discovery first (repli): unique (partition, halo node) keys per
+    # chunk, merged at the end — matches np.unique's sorted order per part
+    halos: List[np.ndarray] = [np.zeros(0, dtype=np.int64)] * k
+    if scheme == "repli":
+        parts: List[np.ndarray] = []
+        for ch in g.iter_csr_chunks():
+            ls, ld = labels[ch.src], labels[ch.dst]
+            hm = ls != ld               # src is halo for dst's partition
+            hk = np.unique(ld[hm] * n + ch.src[hm])
+            if hk.size:
+                parts.append(hk)
+        if parts:
+            keys = np.unique(np.concatenate(parts))
+            part_of, node_of = keys // n, keys % n
+            halos = [node_of[part_of == p] for p in range(k)]
+
+    node_lists: List[np.ndarray] = []
+    owned_lists: List[np.ndarray] = []
+    remaps: List[np.ndarray] = []
+    for p in range(k):
+        owned = np.flatnonzero(labels == p)
+        if scheme == "inner":
+            nodes = owned
+            owned_flags = np.ones(owned.shape[0], dtype=bool)
+        else:
+            nodes = np.concatenate([owned, halos[p]])
+            owned_flags = np.concatenate([
+                np.ones(owned.shape[0], dtype=bool),
+                np.zeros(halos[p].shape[0], dtype=bool)])
+        remap = np.full(n, -1, dtype=np.int32)
+        remap[nodes] = np.arange(nodes.shape[0], dtype=np.int32)
+        node_lists.append(nodes)
+        owned_lists.append(owned_flags)
+        remaps.append(remap)
+
+    pieces: List[List[Tuple[np.ndarray, np.ndarray, np.ndarray]]] = \
+        [[] for _ in range(k)]
+    for ch in g.iter_csr_chunks():
+        ls, ld = labels[ch.src], labels[ch.dst]
+        for p in range(k):
+            keep = (ls == p) & (ld == p) if scheme == "inner" else ld == p
+            if not keep.any():
+                continue
+            pieces[p].append((remaps[p][ch.src[keep]],
+                              remaps[p][ch.dst[keep]],
+                              ch.weight[keep].astype(np.float32)))
+    arc_lists: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    for p in range(k):
+        if pieces[p]:
+            pls = np.concatenate([x[0] for x in pieces[p]])
+            pld = np.concatenate([x[1] for x in pieces[p]])
+            plw = np.concatenate([x[2] for x in pieces[p]])
+        else:
+            pls = pld = np.zeros(0, dtype=np.int32)
+            plw = np.zeros(0, dtype=np.float32)
+        pieces[p] = []                  # release as we go
+        order = np.argsort(pld, kind="stable")
+        arc_lists.append((pls[order], pld[order], plw[order]))
+    return node_lists, owned_lists, arc_lists
+
+
 def build_partition_batch(g: Graph, labels: np.ndarray, scheme: str = "inner",
                           pad_nodes_to: Optional[int] = None,
                           pad_edges_to: Optional[int] = None,
@@ -54,38 +128,44 @@ def build_partition_batch(g: Graph, labels: np.ndarray, scheme: str = "inner",
     assert scheme in ("inner", "repli"), scheme
     labels = np.asarray(labels, dtype=np.int64)
     k = int(labels.max()) + 1
-    src, dst, w = g.arcs()          # every directed arc (u -> v)
 
-    node_lists: List[np.ndarray] = []
-    owned_lists: List[np.ndarray] = []
-    arc_lists: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    if getattr(g, "out_of_core", False):
+        node_lists, owned_lists, arc_lists = \
+            _partition_lists_chunked(g, labels, k, scheme)
+    else:
+        src, dst, w = g.arcs()          # every directed arc (u -> v)
 
-    for p in range(k):
-        owned = np.where(labels == p)[0]
-        owned_set = np.zeros(g.n, dtype=bool)
-        owned_set[owned] = True
-        if scheme == "inner":
-            keep = owned_set[src] & owned_set[dst]
-            nodes = owned
-            owned_flags = np.ones(nodes.shape[0], dtype=bool)
-        else:
-            # Repli: owned nodes + 1-hop halo; keep every arc whose *dst* is
-            # owned (halo feeds owned nodes) plus owned->owned arcs. Arcs into
-            # halo nodes are dropped — halo features are frozen inputs.
-            keep = owned_set[dst]
-            halo = np.unique(src[keep & ~owned_set[src]])
-            nodes = np.concatenate([owned, halo])
-            owned_flags = np.concatenate([
-                np.ones(owned.shape[0], dtype=bool),
-                np.zeros(halo.shape[0], dtype=bool)])
-        remap = np.full(g.n, -1, dtype=np.int64)
-        remap[nodes] = np.arange(nodes.shape[0])
-        ls, ld, lw = remap[src[keep]], remap[dst[keep]], w[keep]
-        # destination-sorted for segment-sum friendliness
-        order = np.argsort(ld, kind="stable")
-        arc_lists.append((ls[order], ld[order], lw[order]))
-        node_lists.append(nodes)
-        owned_lists.append(owned_flags)
+        node_lists = []
+        owned_lists = []
+        arc_lists = []
+
+        for p in range(k):
+            owned = np.where(labels == p)[0]
+            owned_set = np.zeros(g.n, dtype=bool)
+            owned_set[owned] = True
+            if scheme == "inner":
+                keep = owned_set[src] & owned_set[dst]
+                nodes = owned
+                owned_flags = np.ones(nodes.shape[0], dtype=bool)
+            else:
+                # Repli: owned nodes + 1-hop halo; keep every arc whose
+                # *dst* is owned (halo feeds owned nodes) plus owned->owned
+                # arcs. Arcs into halo nodes are dropped — halo features
+                # are frozen inputs.
+                keep = owned_set[dst]
+                halo = np.unique(src[keep & ~owned_set[src]])
+                nodes = np.concatenate([owned, halo])
+                owned_flags = np.concatenate([
+                    np.ones(owned.shape[0], dtype=bool),
+                    np.zeros(halo.shape[0], dtype=bool)])
+            remap = np.full(g.n, -1, dtype=np.int64)
+            remap[nodes] = np.arange(nodes.shape[0])
+            ls, ld, lw = remap[src[keep]], remap[dst[keep]], w[keep]
+            # destination-sorted for segment-sum friendliness
+            order = np.argsort(ld, kind="stable")
+            arc_lists.append((ls[order], ld[order], lw[order]))
+            node_lists.append(nodes)
+            owned_lists.append(owned_flags)
 
     n_max = max(x.shape[0] for x in node_lists)
     e_max = max(x[0].shape[0] for x in arc_lists) if arc_lists else 1

@@ -25,12 +25,31 @@ community-shaped now routes through three primitives here (DESIGN.md §10):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Callable, Iterable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["QuotientEdges", "quotient_edges", "connected_components",
+__all__ = ["ArcChunk", "QuotientEdges", "quotient_edges",
+           "connected_components", "connected_components_chunks",
            "split_components", "CommunityState"]
+
+
+class ArcChunk(NamedTuple):
+    """One contiguous CSR slab: all arcs of rows [row_start, row_stop).
+
+    The unit of the out-of-core protocol (DESIGN.md §15): both graph
+    backends yield these from ``iter_csr_chunks()`` — the in-RAM ``Graph``
+    as a single zero-copy chunk covering the whole CSR, ``MmapGraphStore``
+    as one chunk per on-disk shard — and every sequential-sweep primitive
+    in this module consumes them instead of whole-array ``arcs()``.
+    """
+    row_start: int
+    row_stop: int
+    arc_start: int
+    arc_stop: int
+    src: np.ndarray       # (a,) int64 global row id per arc
+    dst: np.ndarray       # (a,) int64
+    weight: np.ndarray    # (a,) float64
 
 
 # ---------------------------------------------------------------------------
@@ -75,9 +94,6 @@ def quotient_edges(g, labels: np.ndarray,
     """
     labels = np.asarray(labels, dtype=np.int64)
     k = int(labels.max()) + 1 if labels.size else 0
-    src, dst, w = g.arcs()
-    if weights is not None:
-        w = np.asarray(weights, dtype=np.float64)
     if self_weight is None:
         sw = g.self_weight
         if sw.shape[0] != g.n:     # Graph's zero-length default
@@ -87,6 +103,11 @@ def quotient_edges(g, labels: np.ndarray,
         if sw.shape[0] != g.n:
             raise ValueError(f"self_weight has shape {sw.shape}, "
                              f"expected ({g.n},)")
+    if getattr(g, "out_of_core", False):
+        return _quotient_edges_chunked(g, labels, k, weights, sw)
+    src, dst, w = g.arcs()
+    if weights is not None:
+        w = np.asarray(weights, dtype=np.float64)
     ls, ld = labels[src], labels[dst]
     inter = ls != ld
     key = ls[inter] * k + ld[inter]
@@ -106,6 +127,50 @@ def quotient_edges(g, labels: np.ndarray,
     intra = np.bincount(ls[~inter], weights=w[~inter], minlength=k) / 2.0
     intra += np.bincount(labels, weights=sw, minlength=k)
     node_w = np.bincount(labels, weights=g.node_weight, minlength=k)
+    return QuotientEdges(k=k, src=qs, dst=qd, weight=qw, intra=intra,
+                         node_weight=node_w)
+
+
+def _quotient_edges_chunked(g, labels: np.ndarray, k: int,
+                            weights: Optional[np.ndarray],
+                            sw: np.ndarray) -> QuotientEdges:
+    """The out-of-core body of :func:`quotient_edges`: one sequential sweep
+    over ``iter_csr_chunks()``, per-chunk argsort+reduceat partials, then a
+    final merge over the (already community-sized) partials. Peak RAM is one
+    chunk's arcs plus O(k + total inter-community pairs), never O(num_arcs).
+    """
+    part_keys: List[np.ndarray] = []
+    part_w: List[np.ndarray] = []
+    intra = np.zeros(k, dtype=np.float64)
+    for ch in g.iter_csr_chunks():
+        w = (ch.weight if weights is None else
+             np.asarray(weights[ch.arc_start:ch.arc_stop], dtype=np.float64))
+        ls, ld = labels[ch.src], labels[ch.dst]
+        inter = ls != ld
+        if (~inter).any():
+            intra += np.bincount(ls[~inter], weights=w[~inter], minlength=k)
+        key = ls[inter] * k + ld[inter]
+        if key.size:
+            order = np.argsort(key, kind="stable")
+            key, wi = key[order], w[inter][order]
+            starts = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+            part_keys.append(key[starts])
+            part_w.append(np.add.reduceat(wi, starts))
+    intra /= 2.0
+    intra += np.bincount(labels, weights=sw, minlength=k)
+    node_w = np.bincount(labels, weights=g.node_weight, minlength=k)
+    if part_keys:
+        key = np.concatenate(part_keys)
+        pw = np.concatenate(part_w)
+        order = np.argsort(key, kind="stable")
+        key, pw = key[order], pw[order]
+        starts = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+        qw = np.add.reduceat(pw, starts)
+        qk = key[starts]
+        qs, qd = qk // k, qk % k
+    else:
+        qs = qd = np.zeros(0, dtype=np.int64)
+        qw = np.zeros(0, dtype=np.float64)
     return QuotientEdges(k=k, src=qs, dst=qd, weight=qw, intra=intra,
                          node_weight=node_w)
 
@@ -156,15 +221,69 @@ def connected_components(n: int, src: np.ndarray, dst: np.ndarray,
     return comp
 
 
+def connected_components_chunks(
+        n: int,
+        make_chunks: Callable[[], Iterable[Tuple[np.ndarray, np.ndarray]]],
+        mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """:func:`connected_components` over streamed arc chunks.
+
+    ``make_chunks`` returns a *fresh* iterable of ``(src, dst)`` arc pairs
+    each time it is called; the union-find makes repeated passes over it
+    (min-hooking + pointer jumping per chunk) until a full pass hooks
+    nothing. Peak RAM is O(n) parent state plus one chunk of arcs — this is
+    how component structure is computed for graphs whose arc list does not
+    fit in RAM. The fixed point (parent = smallest member of the component)
+    and therefore the component numbering are identical to the whole-array
+    version, which stays untouched for the in-RAM path.
+    """
+    parent = np.arange(n, dtype=np.int64)
+    m = None if mask is None else np.asarray(mask, bool)
+    while True:
+        changed = False
+        for src, dst in make_chunks():
+            src = np.asarray(src, dtype=np.int64)
+            dst = np.asarray(dst, dtype=np.int64)
+            if m is not None:
+                keep = m[src] & m[dst]
+                src, dst = src[keep], dst[keep]
+            if not src.size:
+                continue
+            ps, pd = parent[src], parent[dst]
+            hooked = ps != pd
+            if not hooked.any():
+                continue
+            hi = np.maximum(ps, pd)[hooked]
+            lo = np.minimum(ps, pd)[hooked]
+            np.minimum.at(parent, hi, lo)
+            parent = _pointer_jump(parent)
+            changed = True
+        if not changed:
+            break
+    comp = np.full(n, -1, dtype=np.int64)
+    mm = np.ones(n, dtype=bool) if m is None else m
+    if mm.any():
+        _, ids = np.unique(parent[mm], return_inverse=True)
+        comp[mm] = ids
+    return comp
+
+
 def split_components(g, labels: np.ndarray) -> np.ndarray:
     """Relabel so every connected component of every community is its own
     community (the "+F" pre-split of paper §5.4), fully vectorized.
 
     Components of the intra-community edge subgraph *are* the per-community
     components, so one :func:`connected_components` pass over the arcs whose
-    endpoints share a label does the whole job.
+    endpoints share a label does the whole job. On an out-of-core store the
+    same-label filter is applied chunk-by-chunk and the union-find streams
+    (:func:`connected_components_chunks`).
     """
     labels = np.asarray(labels, dtype=np.int64)
+    if getattr(g, "out_of_core", False):
+        def chunks():
+            for ch in g.iter_csr_chunks():
+                same = labels[ch.src] == labels[ch.dst]
+                yield ch.src[same], ch.dst[same]
+        return connected_components_chunks(g.n, chunks)
     src, dst, _ = g.arcs()
     same = labels[src] == labels[dst]
     return connected_components(g.n, src[same], dst[same])

@@ -7,7 +7,7 @@ buffers produced by :mod:`repro.core.assemble`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional, Tuple
+from typing import ClassVar, Iterable, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -20,7 +20,16 @@ class Graph:
 
     Edges are stored twice (both directions); ``indptr``/``indices`` follow
     scipy.sparse.csr conventions. ``edge_weight`` is per *directed* arc.
+
+    ``Graph`` is the in-RAM backend of the ``GraphStore`` protocol
+    (DESIGN.md §15): it shares ``iter_csr_chunks()``/``gather_arcs()`` with
+    :class:`repro.core.graphstore.MmapGraphStore` so the partitioning engine
+    can consume either, and ``out_of_core`` tells chunk-aware call sites
+    which dispatch path applies (the in-RAM paths are byte-identical to
+    their pre-protocol behavior).
     """
+
+    out_of_core: ClassVar[bool] = False
 
     n: int
     indptr: np.ndarray          # (n+1,) int64
@@ -109,6 +118,29 @@ class Graph:
     def arcs(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(src, dst, weight) for every directed arc."""
         return self._arc_src(), self.indices.astype(np.int64), self.edge_weight
+
+    # ----- GraphStore protocol ---------------------------------------------
+    def iter_csr_chunks(self) -> Iterator[engine.ArcChunk]:
+        """One zero-copy chunk covering the whole CSR (the in-RAM backend's
+        trivial implementation of the chunk protocol)."""
+        src, dst, w = self.arcs()
+        yield engine.ArcChunk(row_start=0, row_stop=self.n, arc_start=0,
+                              arc_stop=self.num_arcs, src=src, dst=dst,
+                              weight=w)
+
+    def gather_arcs(self, nodes: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(asrc, adst, aw): the CSR slices of all given nodes concatenated,
+        in the given node order, without a Python loop."""
+        counts = self.indptr[nodes + 1] - self.indptr[nodes]
+        total = int(counts.sum())
+        stops = np.cumsum(counts)
+        flat = (np.arange(total, dtype=np.int64)
+                - np.repeat(stops - counts, counts)
+                + np.repeat(self.indptr[nodes], counts))
+        asrc = np.repeat(nodes, counts)
+        return asrc, self.indices[flat].astype(np.int64), \
+            self.edge_weight[flat]
 
     # ----- structure queries -----------------------------------------------
     def connected_components(self, mask: Optional[np.ndarray] = None) -> np.ndarray:
@@ -279,9 +311,15 @@ def make_arxiv_like(n: int = 40_000, num_classes: int = 40,
 
 def make_proteins_like(n: int = 6_000, num_tasks: int = 112,
                        feature_dim: int = 8, avg_deg: float = 80.0,
-                       seed: int = 1) -> NodeDataset:
+                       seed: int = 1, scale: float = 1.0) -> NodeDataset:
     """A dense PPI stand-in: high average degree, multilabel binary tasks
-    (paper's Proteins: 132k nodes, 39.5M edges, avg degree 597, 112 tasks)."""
+    (paper's Proteins: 132k nodes, 39.5M edges, avg degree 597, 112 tasks).
+
+    ``scale`` multiplies the node count, same contract as
+    :func:`make_arxiv_like` (``--dataset proteins --dataset-scale 22`` on
+    the pipeline CLI reaches the paper's 132k nodes).
+    """
+    n = max(int(n * scale), 1)
     rng = np.random.default_rng(seed)
     num_blocks = 24
     block_of = rng.integers(0, num_blocks, n)

@@ -1,0 +1,630 @@
+"""Out-of-core graph storage — the memory-mapped chunked CSR bundle.
+
+The paper partitions the whole graph centrally (§5 Setup) and until this
+module every layer of the repro inherited that assumption: the full CSR in
+RAM, edge lists materialized at once, monolithic npz artifacts. The
+DGL/GraphStorm answer (SNIPPETS §3) is a chunked on-disk layout —
+``node_map``/``edge_map`` manifests plus per-chunk data files — and this
+module is our version of it (DESIGN.md §15):
+
+    <dir>/
+      manifest.json            # version, n, num_arcs, total_weight,
+                               # node_map/edge_map (per-chunk row/arc
+                               # ranges), per-file sha256, fingerprint
+      indptr.npy               # (n+1,) int64 GLOBAL row pointers
+      node_weight.npy          # optional (absent = all ones)
+      self_weight.npy          # optional (absent = all zeros)
+      chunks/00000.indices.npy # int32 neighbor ids of rows in chunk 0
+      chunks/00000.weights.npy # float64 arc weights of chunk 0
+      chunks/00001.indices.npy
+      ...
+
+The global ``indptr`` is O(n) and deliberately lives in one file: node-sized
+arrays are the RAM budget we *do* allow (8 MB per 10^6 nodes), arc-sized
+arrays are the ones that must stay on disk. Chunk files are opened with
+``np.load(mmap_mode="r")`` so a chunk's pages enter RAM only as they are
+read and the OS may evict them at will.
+
+Consumers never call ``arcs()`` on a store — it raises, on purpose, so an
+accidental whole-graph materialization fails loudly instead of silently
+blowing the RAM budget. Everything community-shaped goes through
+``iter_csr_chunks()`` (sequential sweeps: quotient graphs, connected
+components, partition metrics, batch assembly) or ``gather_arcs(nodes)``
+(random row access: the Leiden frontier), both of which the in-RAM
+:class:`~repro.core.graph.Graph` also implements — the ``GraphStore``
+protocol is the seam, and the engine is written against it.
+
+Writes are atomic at directory granularity: everything lands in a
+``<dir>.tmp-*`` sibling which is ``os.replace``d into place, so a crashed
+build can never leave a half-written bundle that later loads. The manifest
+carries a content fingerprint (sha256 over n/num_arcs/chunk maps/per-file
+hashes); :meth:`MmapGraphStore.load` re-derives it from the manifest and
+hard-errors on mismatch, and ``verify=True`` additionally re-hashes every
+data file.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .engine import ArcChunk, connected_components_chunks
+
+__all__ = ["STORE_FORMAT_VERSION", "GraphStoreError",
+           "GraphStoreIntegrityError", "MmapGraphStore", "atomic_directory",
+           "build_store_from_edge_batches", "store_from_graph"]
+
+STORE_FORMAT_VERSION = 1
+MANIFEST = "manifest.json"
+
+# Default target arcs per chunk: ~4M arcs -> ~16 MB of int32 indices +
+# ~32 MB of float64 weights resident per chunk while sweeping.
+DEFAULT_CHUNK_ARCS = 4_000_000
+
+
+class GraphStoreError(RuntimeError):
+    """Malformed/unusable graph-store bundle."""
+
+
+class GraphStoreIntegrityError(GraphStoreError):
+    """Manifest fingerprint or file hash does not match the bundle contents.
+
+    Deliberately a hard error, never a silent fallback: a store that fails
+    integrity must not be partitioned or trained on (mirrors the serving
+    bundle's ``StaleServingArtifact`` contract, DESIGN.md §13)."""
+
+
+# ---------------------------------------------------------------------------
+# atomic directory writes
+# ---------------------------------------------------------------------------
+
+class atomic_directory:
+    """``with atomic_directory(final) as tmp: ...`` — populate ``tmp``, and
+    on clean exit it is renamed to ``final`` in one ``os.replace``. On error
+    the temp tree is deleted and ``final`` is untouched. A pre-existing
+    ``final`` is replaced only after the new tree is fully written."""
+
+    def __init__(self, final_path: str):
+        self.final = os.path.abspath(final_path)
+        self.tmp: Optional[str] = None
+
+    def __enter__(self) -> str:
+        parent = os.path.dirname(self.final) or "."
+        os.makedirs(parent, exist_ok=True)
+        self.tmp = tempfile.mkdtemp(
+            dir=parent, prefix=os.path.basename(self.final) + ".tmp-")
+        return self.tmp
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        assert self.tmp is not None
+        if exc_type is not None:
+            shutil.rmtree(self.tmp, ignore_errors=True)
+            return
+        if os.path.isdir(self.final):
+            # replace an existing bundle: move it aside first so the final
+            # rename is still atomic, then drop the old tree.
+            old = self.tmp + ".old"
+            os.replace(self.final, old)
+            os.replace(self.tmp, self.final)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.replace(self.tmp, self.final)
+
+
+def _sha256_file(path: str, bufsize: int = 1 << 22) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            blk = f.read(bufsize)
+            if not blk:
+                return h.hexdigest()
+            h.update(blk)
+
+
+def _fingerprint_from(manifest: dict) -> str:
+    """The content fingerprint: a digest over the structural fields and the
+    per-file hashes (NOT over the stored fingerprint itself)."""
+    payload = {k: manifest[k] for k in
+               ("format", "version", "n", "num_arcs", "total_weight",
+                "node_map", "edge_map", "files")}
+    blob = json.dumps(payload, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def _save_npy(root: str, rel: str, arr: np.ndarray, files: dict) -> None:
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.save(path, arr)
+    files[rel] = _sha256_file(path)
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+class MmapGraphStore:
+    """A read-only, memory-mapped, chunked-CSR undirected graph.
+
+    Satisfies the same structural protocol the engine consumes from
+    :class:`~repro.core.graph.Graph` (``n``/``num_arcs``/``m``/
+    ``node_weight``/``self_weight``/``indptr``/``degrees``/
+    ``iter_csr_chunks``/``gather_arcs``/``aggregate``/
+    ``connected_components``) — but ``out_of_core`` is True and ``arcs()``
+    raises instead of materializing the whole arc list.
+    """
+
+    out_of_core = True
+
+    def __init__(self, root: str, manifest: dict):
+        self.root = root
+        self.manifest = manifest
+        self.n = int(manifest["n"])
+        self.num_arcs = int(manifest["num_arcs"])
+        self._total_weight = float(manifest["total_weight"])
+        # node_map/edge_map: per-chunk [start, stop) row / arc ranges
+        # (DGL's node_map/edge_map analogue for a single-machine bundle).
+        self.node_map = [tuple(map(int, r)) for r in manifest["node_map"]]
+        self.edge_map = [tuple(map(int, r)) for r in manifest["edge_map"]]
+        self.fingerprint = manifest["fingerprint"]
+        self.indptr = np.load(os.path.join(root, "indptr.npy"),
+                              mmap_mode="r")
+        nw_path = os.path.join(root, "node_weight.npy")
+        self._node_weight = (np.load(nw_path, mmap_mode="r")
+                             if os.path.exists(nw_path) else None)
+        sw_path = os.path.join(root, "self_weight.npy")
+        self._self_weight = (np.load(sw_path, mmap_mode="r")
+                             if os.path.exists(sw_path) else None)
+        self._degrees: Optional[np.ndarray] = None
+
+    # ----- load/verify -----------------------------------------------------
+    @classmethod
+    def load(cls, root: str, verify: bool = False) -> "MmapGraphStore":
+        """Open a bundle. Always re-derives the manifest fingerprint from
+        the manifest body and hard-errors on mismatch; ``verify=True``
+        additionally re-hashes every data file against the manifest."""
+        root = os.path.abspath(os.path.expanduser(root))
+        mpath = os.path.join(root, MANIFEST)
+        if not os.path.exists(mpath):
+            raise GraphStoreError(f"no graph-store manifest at {mpath}")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != "repro-mmap-csr":
+            raise GraphStoreError(
+                f"{mpath}: not a repro-mmap-csr bundle "
+                f"(format={manifest.get('format')!r})")
+        if int(manifest.get("version", -1)) > STORE_FORMAT_VERSION:
+            raise GraphStoreError(
+                f"{mpath}: bundle format v{manifest['version']} is newer "
+                f"than this reader (v{STORE_FORMAT_VERSION})")
+        derived = _fingerprint_from(manifest)
+        if derived != manifest.get("fingerprint"):
+            raise GraphStoreIntegrityError(
+                f"{root}: manifest fingerprint mismatch "
+                f"(stored {manifest.get('fingerprint')!r:.20}..., derived "
+                f"{derived[:16]}...) — the bundle was tampered with or "
+                f"half-written; rebuild it")
+        for rel in manifest["files"]:
+            if not os.path.exists(os.path.join(root, rel)):
+                raise GraphStoreError(f"{root}: missing data file {rel}")
+        if verify:
+            for rel, want in manifest["files"].items():
+                got = _sha256_file(os.path.join(root, rel))
+                if got != want:
+                    raise GraphStoreIntegrityError(
+                        f"{root}: content hash mismatch for {rel} "
+                        f"(manifest {want[:16]}..., file {got[:16]}...)")
+        return cls(root, manifest)
+
+    # ----- basic accessors (Graph-compatible) -------------------------------
+    @property
+    def m(self) -> float:
+        """Total undirected edge weight (self-loops included)."""
+        return self._total_weight
+
+    @property
+    def node_weight(self) -> np.ndarray:
+        if self._node_weight is None:
+            self._node_weight = np.ones(self.n, dtype=np.float64)
+        return self._node_weight
+
+    @property
+    def self_weight(self) -> np.ndarray:
+        # Graph's zero-length default means "all zeros"; keep the contract.
+        if self._self_weight is None:
+            return np.zeros(0)
+        return self._self_weight
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.node_map)
+
+    def degrees(self) -> np.ndarray:
+        """Weighted degree per node, computed in one streaming pass and
+        cached (O(n) RAM)."""
+        if self._degrees is None:
+            out = np.zeros(self.n, dtype=np.float64)
+            sw = self.self_weight
+            if sw.shape[0] == self.n:
+                out += 2.0 * np.asarray(sw, dtype=np.float64)
+            for ch in self.iter_csr_chunks():
+                rows = ch.row_stop - ch.row_start
+                counts = np.diff(self.indptr[ch.row_start:ch.row_stop + 1])
+                local = np.repeat(np.arange(rows, dtype=np.int64), counts)
+                out[ch.row_start:ch.row_stop] += np.bincount(
+                    local, weights=ch.weight, minlength=rows)
+            self._degrees = out
+        return self._degrees
+
+    def arcs(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        raise GraphStoreError(
+            "MmapGraphStore.arcs() would materialize the whole arc list in "
+            "RAM — iterate iter_csr_chunks() or use gather_arcs(nodes) "
+            "instead (the out-of-core contract, DESIGN.md §15)")
+
+    # ----- chunk access -----------------------------------------------------
+    def _chunk_arrays(self, c: int) -> Tuple[np.ndarray, np.ndarray]:
+        base = os.path.join(self.root, "chunks", f"{c:05d}")
+        idx = np.load(base + ".indices.npy", mmap_mode="r")
+        wgt = np.load(base + ".weights.npy", mmap_mode="r")
+        return idx, wgt
+
+    def iter_csr_chunks(self) -> Iterator[ArcChunk]:
+        """Yield every chunk in row order. ``src`` is reconstructed from the
+        global indptr (int64), ``dst``/``weight`` are memory-mapped views —
+        resident RAM is one chunk's worth at a time."""
+        for c, ((r0, r1), (a0, a1)) in enumerate(
+                zip(self.node_map, self.edge_map)):
+            idx, wgt = self._chunk_arrays(c)
+            counts = np.diff(self.indptr[r0:r1 + 1])
+            src = np.repeat(np.arange(r0, r1, dtype=np.int64), counts)
+            yield ArcChunk(row_start=r0, row_stop=r1, arc_start=a0,
+                           arc_stop=a1, src=src,
+                           dst=np.asarray(idx, dtype=np.int64),
+                           weight=np.asarray(wgt, dtype=np.float64))
+
+    def gather_arcs(self, nodes: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(asrc, adst, aw) of every arc of ``nodes`` (ascending node ids):
+        the random-row-access half of the protocol, used by the Leiden
+        frontier. Rows are grouped per chunk so each chunk file is touched
+        at most once per call."""
+        nodes = np.asarray(nodes, dtype=np.int64)
+        if nodes.size == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy(), np.zeros(0, dtype=np.float64)
+        starts = np.array([r0 for r0, _ in self.node_map], dtype=np.int64)
+        which = np.searchsorted(starts, nodes, side="right") - 1
+        out_s: List[np.ndarray] = []
+        out_d: List[np.ndarray] = []
+        out_w: List[np.ndarray] = []
+        # nodes ascending -> chunk ids non-decreasing -> contiguous runs
+        run_starts = np.flatnonzero(np.r_[True, which[1:] != which[:-1]])
+        run_stops = np.r_[run_starts[1:], which.size]
+        for lo, hi in zip(run_starts, run_stops):
+            c = int(which[lo])
+            sub = nodes[lo:hi]
+            idx, wgt = self._chunk_arrays(c)
+            a0 = self.edge_map[c][0]
+            counts = (self.indptr[sub + 1] - self.indptr[sub]).astype(
+                np.int64)
+            total = int(counts.sum())
+            if total == 0:
+                continue
+            stops = np.cumsum(counts)
+            flat = (np.arange(total, dtype=np.int64)
+                    - np.repeat(stops - counts, counts)
+                    + np.repeat(self.indptr[sub] - a0, counts))
+            out_s.append(np.repeat(sub, counts))
+            out_d.append(idx[flat].astype(np.int64))
+            out_w.append(np.asarray(wgt[flat], dtype=np.float64))
+        if not out_s:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z.copy(), np.zeros(0, dtype=np.float64)
+        return (np.concatenate(out_s), np.concatenate(out_d),
+                np.concatenate(out_w))
+
+    # ----- structure queries (Graph-compatible) -----------------------------
+    def connected_components(self, mask: Optional[np.ndarray] = None
+                             ) -> np.ndarray:
+        return connected_components_chunks(
+            self.n, lambda: ((ch.src, ch.dst)
+                             for ch in self.iter_csr_chunks()), mask=mask)
+
+    def num_components(self, mask: Optional[np.ndarray] = None) -> int:
+        comp = self.connected_components(mask)
+        return int(comp.max() + 1) if (comp >= 0).any() else 0
+
+    def aggregate(self, labels: np.ndarray):
+        """Quotient graph as an in-RAM :class:`Graph` — the coarsen step of
+        the coarsen→partition→refine path. The quotient must fit in RAM;
+        that is the contract (DESIGN.md §15 RAM-budget math)."""
+        from .engine import quotient_edges
+        from .graph import Graph
+        q = quotient_edges(self, labels)
+        return Graph(n=q.k, indptr=q.indptr(),
+                     indices=q.dst.astype(np.int32), edge_weight=q.weight,
+                     node_weight=q.node_weight, self_weight=q.intra)
+
+    def __repr__(self) -> str:
+        return (f"MmapGraphStore(n={self.n}, num_arcs={self.num_arcs}, "
+                f"chunks={self.num_chunks}, root={self.root!r})")
+
+
+# ---------------------------------------------------------------------------
+# writers
+# ---------------------------------------------------------------------------
+
+def _write_bundle(root: str, n: int,
+                  chunk_rows: Sequence[Tuple[int, int]],
+                  chunk_payloads: Iterable[Tuple[np.ndarray, np.ndarray]],
+                  node_weight: Optional[np.ndarray],
+                  self_weight: Optional[np.ndarray],
+                  extra_self_weight_total: float = 0.0) -> str:
+    """Write a bundle from per-chunk ``(local_indptr, indices, weights)``
+    payloads (consumed lazily, in chunk order). Returns the final root
+    path."""
+    with atomic_directory(root) as tmp:
+        files: dict = {}
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        node_map: List[Tuple[int, int]] = []
+        edge_map: List[Tuple[int, int]] = []
+        arc_base = 0
+        total_w = 0.0
+        for (r0, r1), (local_indptr, idx, wgt) in zip(
+                chunk_rows, chunk_payloads):
+            c = len(node_map)
+            idx = np.ascontiguousarray(idx, dtype=np.int32)
+            wgt = np.ascontiguousarray(wgt, dtype=np.float64)
+            _save_npy(tmp, os.path.join("chunks", f"{c:05d}.indices.npy"),
+                      idx, files)
+            _save_npy(tmp, os.path.join("chunks", f"{c:05d}.weights.npy"),
+                      wgt, files)
+            indptr[r0 + 1:r1 + 1] = arc_base + local_indptr[1:]
+            node_map.append((int(r0), int(r1)))
+            edge_map.append((arc_base, arc_base + idx.shape[0]))
+            arc_base += idx.shape[0]
+            total_w += float(wgt.sum())
+        _save_npy(tmp, "indptr.npy", indptr, files)
+        if node_weight is not None:
+            _save_npy(tmp, "node_weight.npy",
+                      np.ascontiguousarray(node_weight, np.float64), files)
+        sw_total = extra_self_weight_total
+        if self_weight is not None and np.asarray(self_weight).shape[0]:
+            _save_npy(tmp, "self_weight.npy",
+                      np.ascontiguousarray(self_weight, np.float64), files)
+            sw_total = float(np.asarray(self_weight, np.float64).sum())
+        manifest = {
+            "format": "repro-mmap-csr",
+            "version": STORE_FORMAT_VERSION,
+            "n": int(n),
+            "num_arcs": int(arc_base),
+            # m convention matches Graph.m: arcs are double-counted, plus
+            # full self-loop weight once.
+            "total_weight": total_w / 2.0 + sw_total,
+            "node_map": [list(r) for r in node_map],
+            "edge_map": [list(r) for r in edge_map],
+            "files": files,
+        }
+        manifest["fingerprint"] = _fingerprint_from(manifest)
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+    return root
+
+
+def _chunk_row_ranges(n: int, indptr: np.ndarray,
+                      chunk_arcs: int) -> List[Tuple[int, int]]:
+    """Row ranges so each chunk holds <= chunk_arcs arcs (single over-wide
+    rows get a chunk of their own)."""
+    ranges: List[Tuple[int, int]] = []
+    r0 = 0
+    while r0 < n:
+        r1 = int(np.searchsorted(indptr, indptr[r0] + chunk_arcs,
+                                 side="right")) - 1
+        r1 = min(max(r1, r0 + 1), n)
+        ranges.append((r0, r1))
+        r0 = r1
+    return ranges or [(0, n)]
+
+
+def store_from_graph(g, root: str,
+                     chunk_arcs: int = DEFAULT_CHUNK_ARCS
+                     ) -> MmapGraphStore:
+    """Copy an in-RAM :class:`Graph` to a chunked mmap bundle."""
+    rows = _chunk_row_ranges(g.n, g.indptr, chunk_arcs)
+
+    def payloads():
+        for r0, r1 in rows:
+            a0, a1 = int(g.indptr[r0]), int(g.indptr[r1])
+            local = (g.indptr[r0:r1 + 1] - a0).astype(np.int64)
+            yield local, g.indices[a0:a1], g.edge_weight[a0:a1]
+
+    # all-zero self weights / all-ones node weights are the defaults; skip
+    # the files (zeros(0) and zeros(n) spell the same "no self-loops")
+    sw = g.self_weight if (g.self_weight.shape[0] == g.n
+                           and g.self_weight.any()) else None
+    nw = None if np.all(g.node_weight == 1.0) else g.node_weight
+    _write_bundle(root, g.n, rows, payloads(), nw, sw)
+    return MmapGraphStore.load(root)
+
+
+# ---------------------------------------------------------------------------
+# the external-memory CSR builder (streamed edge batches -> bundle)
+# ---------------------------------------------------------------------------
+
+_ARC_DTYPE = np.dtype([("src", np.int64), ("dst", np.int64),
+                       ("w", np.float64)])
+
+
+class _ArcBuckets:
+    """Pass-1 scratch: per-chunk append-only arc files, bucketed by the
+    (fixed, id-range) chunk of each arc's source row."""
+
+    def __init__(self, workdir: str, n: int, num_chunks: int):
+        self.n = n
+        self.num_chunks = max(int(num_chunks), 1)
+        self.rows_per_chunk = -(-n // self.num_chunks)   # ceil
+        self.paths = [os.path.join(workdir, f"bucket{c:05d}.bin")
+                      for c in range(self.num_chunks)]
+        self.handles = [open(p, "ab") for p in self.paths]
+
+    def chunk_of(self, rows: np.ndarray) -> np.ndarray:
+        return rows // self.rows_per_chunk
+
+    def add_arcs(self, src: np.ndarray, dst: np.ndarray,
+                 w: np.ndarray) -> None:
+        """Append directed arcs (already symmetrized by the caller)."""
+        rec = np.empty(src.shape[0], dtype=_ARC_DTYPE)
+        rec["src"], rec["dst"], rec["w"] = src, dst, w
+        which = self.chunk_of(src)
+        order = np.argsort(which, kind="stable")
+        rec, which = rec[order], which[order]
+        starts = np.flatnonzero(np.r_[True, which[1:] != which[:-1]])
+        stops = np.r_[starts[1:], which.size]
+        for lo, hi in zip(starts, stops):
+            self.handles[int(which[lo])].write(rec[lo:hi].tobytes())
+
+    def add_edges(self, src: np.ndarray, dst: np.ndarray,
+                  w: Optional[np.ndarray] = None) -> None:
+        """Append undirected edges: drops self-loops, writes both arc
+        directions (the Graph.from_edges symmetrization, streamed)."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if w is None:
+            w = np.ones(src.shape[0], dtype=np.float64)
+        keep = src != dst
+        src, dst, w = src[keep], dst[keep], w[keep]
+        if src.size == 0:
+            return
+        self.add_arcs(np.concatenate([src, dst]),
+                      np.concatenate([dst, src]),
+                      np.concatenate([w, w]))
+
+    def iter_bucket_arcs(self) -> Iterator[np.ndarray]:
+        for p in self.paths:
+            yield np.fromfile(p, dtype=_ARC_DTYPE)
+
+    def close(self) -> None:
+        for h in self.handles:
+            h.close()
+
+
+def build_store_from_edge_batches(
+        root: str, n: int,
+        edge_batches: Iterable[Tuple[np.ndarray, np.ndarray]],
+        est_arcs: Optional[int] = None,
+        chunk_arcs: int = DEFAULT_CHUNK_ARCS,
+        ensure_connected: bool = True,
+        connect_rng: Optional[np.random.Generator] = None,
+        workdir: Optional[str] = None) -> MmapGraphStore:
+    """Build a chunked CSR bundle from streamed (src, dst) edge batches
+    without ever materializing the full edge list.
+
+    ``edge_batches`` is consumed exactly once (a generator is fine — the
+    rng state a streamed dataset threads through its batches stays in step
+    with the in-RAM generation it mirrors). ``est_arcs`` sizes the chunk
+    grid (~2x the total edge count; it only controls chunk granularity,
+    never correctness — omitted means one chunk per ``chunk_arcs`` rows'
+    worth assuming the default arxiv-like average degree).
+
+    Three passes, each bounded by one chunk of arcs in RAM:
+
+    1. **bucket** — every batch is symmetrized (self-loops dropped, both
+       arc directions written) and appended to the scratch file of its
+       source row's chunk. Chunks are fixed node-id ranges, so an arc's
+       bucket is known before degrees are.
+    2. **connect** (optional) — a streamed union-find over the scratch
+       buckets (:func:`connected_components_chunks`); one chain edge per
+       extra component is appended so the bundle is connected. With
+       ``connect_rng`` the chain endpoints replicate the in-RAM
+       ``_ensure_connected`` draws exactly (same rng, same component
+       numbering, same ``choice`` calls — so a streamed build is
+       CSR-identical to ``Graph.from_edges`` + ``_ensure_connected``);
+       without it, smallest members are chained deterministically.
+    3. **finalize** — per bucket: sort by (src, dst), merge duplicate arcs
+       by summing weights, emit the chunk's indices/weights files; the
+       global indptr accumulates per-row counts. All arcs of a row live in
+       that row's one bucket, so per-bucket dedup is global dedup.
+    """
+    work_ctx = tempfile.TemporaryDirectory(
+        dir=workdir or os.path.dirname(os.path.abspath(root)) or ".",
+        prefix=".graphstore-build-")
+    with work_ctx as work:
+        if est_arcs is None:
+            est_arcs = int(n * 2 * 13.8)
+        num_chunks = max(1, -(-int(est_arcs) // chunk_arcs))
+        buckets = _ArcBuckets(work, n, num_chunks)
+        for src, dst in edge_batches:
+            buckets.add_edges(src, dst)
+        buckets.close()
+
+        if ensure_connected:
+            def arc_chunks():
+                for rec in buckets.iter_bucket_arcs():
+                    yield rec["src"], rec["dst"]
+            comp = connected_components_chunks(n, arc_chunks)
+            k = int(comp.max()) + 1 if comp.size else 0
+            if k > 1:
+                if connect_rng is not None:
+                    # replicate _ensure_connected's draws: a random member
+                    # of each extra component chained to a random member
+                    # of component 0, in component order.
+                    reps = [np.where(comp == c)[0] for c in range(k)]
+                    extra_src = np.array(
+                        [connect_rng.choice(reps[c]) for c in range(1, k)],
+                        dtype=np.int64)
+                    extra_dst = connect_rng.choice(
+                        reps[0], size=k - 1).astype(np.int64)
+                else:
+                    # deterministic: smallest member of each extra
+                    # component chained to the overall smallest node
+                    # (components are numbered by smallest member, so the
+                    # first occurrence per component id is that member).
+                    order = np.argsort(comp, kind="stable")
+                    cs = comp[order]
+                    starts = np.flatnonzero(np.r_[True, cs[1:] != cs[:-1]])
+                    reps_arr = order[starts]
+                    extra_src = reps_arr[1:]
+                    extra_dst = np.full(k - 1, reps_arr[0], dtype=np.int64)
+                handles = [open(p, "ab") for p in buckets.paths]
+                rec = np.empty(2 * (k - 1), dtype=_ARC_DTYPE)
+                rec["src"] = np.concatenate([extra_src, extra_dst])
+                rec["dst"] = np.concatenate([extra_dst, extra_src])
+                rec["w"] = 1.0
+                for r in rec:
+                    handles[int(r["src"] // buckets.rows_per_chunk)].write(
+                        r.tobytes())
+                for h in handles:
+                    h.close()
+
+        rows = [(c * buckets.rows_per_chunk,
+                 min((c + 1) * buckets.rows_per_chunk, n))
+                for c in range(buckets.num_chunks)]
+        rows = [r for r in rows if r[0] < r[1]]
+
+        def payloads():
+            for (r0, r1), path in zip(rows, buckets.paths):
+                rec = np.fromfile(path, dtype=_ARC_DTYPE)
+                src, dst, w = rec["src"], rec["dst"], rec["w"]
+                # sort + merge duplicates (sum weights) — the streamed form
+                # of Graph.from_edges(dedup=True); all arcs of a row live
+                # in this one bucket, so per-bucket dedup is global dedup.
+                key = src * n + dst
+                order = np.argsort(key, kind="stable")
+                key, src, w = key[order], src[order], w[order]
+                starts = np.flatnonzero(np.r_[True, key[1:] != key[:-1]])
+                w = np.add.reduceat(w, starts) if key.size else w
+                key = key[starts] if key.size else key
+                src = src[starts] if key.size else src
+                dst = key - src * n
+                counts = np.bincount(src - r0, minlength=r1 - r0)
+                local = np.zeros(r1 - r0 + 1, dtype=np.int64)
+                np.cumsum(counts, out=local[1:])
+                yield local, dst, w
+
+        _write_bundle(root, n, rows, payloads(), None, None)
+    return MmapGraphStore.load(root)

@@ -47,6 +47,15 @@ _MIN_SWEEPS = 8
 _SWEEP_ARC_BUDGET = 24_000_000
 _MOVE_CUTOFF = 200
 _GAIN_TOL = 1e-12
+# Bounded-workspace frontier slicing: one sweep's frontier is processed in
+# slices of at most this many arcs whenever the graph is an MmapGraphStore
+# OR carries more total arcs than the budget (the aggregation levels above
+# a store are in-RAM quotients but can stay nearly as large as the original
+# graph — whole-frontier sweeps there would materialize multi-GB transients
+# and defeat the RAM budget, DESIGN.md §15). Small in-RAM graphs — every
+# tier-1 graph — always use a single slice, the whole frontier at once,
+# which keeps that path byte-identical to the pre-GraphStore behavior.
+_OOC_BATCH_ARCS = 4_000_000
 
 
 def _segment_starts(sorted_keys: np.ndarray) -> np.ndarray:
@@ -56,19 +65,28 @@ def _segment_starts(sorted_keys: np.ndarray) -> np.ndarray:
 
 def _gather_arcs(g: Graph, nodes: np.ndarray
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """(arc source node, arc flat index) for every arc of ``nodes``.
+    """(asrc, adst, aw) — the CSR slices of all given nodes concatenated.
 
-    Returns (asrc, adst, aw) — the CSR slices of all given nodes
-    concatenated, without a Python loop.
-    """
-    counts = g.indptr[nodes + 1] - g.indptr[nodes]
-    total = int(counts.sum())
-    stops = np.cumsum(counts)
-    flat = (np.arange(total, dtype=np.int64)
-            - np.repeat(stops - counts, counts)
-            + np.repeat(g.indptr[nodes], counts))
-    asrc = np.repeat(nodes, counts)
-    return asrc, g.indices[flat].astype(np.int64), g.edge_weight[flat]
+    Thin dispatch onto the GraphStore protocol: both backends implement
+    ``gather_arcs`` (the in-RAM one by flat CSR indexing, the mmap one by
+    per-chunk reads)."""
+    return g.gather_arcs(nodes)
+
+
+def _frontier_batches(g, nodes: np.ndarray, budget: int) -> list:
+    """Split an (ascending) frontier into slices of at most ``budget`` arcs
+    (a single over-budget node still gets a slice of its own)."""
+    counts = np.asarray(g.indptr[nodes + 1]) - np.asarray(g.indptr[nodes])
+    csum = np.cumsum(counts)
+    out = []
+    start = 0
+    while start < nodes.size:
+        base = int(csum[start - 1]) if start else 0
+        stop = int(np.searchsorted(csum, base + budget, side="right"))
+        stop = max(stop, start + 1)
+        out.append(nodes[start:stop])
+        start = stop
+    return out
 
 
 def _local_move(g: Graph, labels: np.ndarray, comm_size: np.ndarray,
@@ -109,18 +127,27 @@ def _local_move(g: Graph, labels: np.ndarray, comm_size: np.ndarray,
     last_left = np.full(n, -1, dtype=np.int64)
     moved_any = False
     fixed = fixed_community_of
+    sliced = (getattr(g, "out_of_core", False)
+              or g.num_arcs > _OOC_BATCH_ARCS)
     max_sweeps = int(np.clip(_SWEEP_ARC_BUDGET // max(g.num_arcs, 1),
                              _MIN_SWEEPS, _MAX_SWEEPS))
-    for _ in range(max_sweeps):
-        nodes = np.flatnonzero(active)
-        if nodes.size == 0:
-            break
-        active[nodes] = False
+    _empty = np.zeros(0, dtype=np.int64)
+
+    def sweep_slice(nodes: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """One frontier slice: gather, score, resolve conflicts, apply the
+        surviving moves. Returns (accepted nodes, their targets, whether
+        any positive-gain candidate existed). Small in-RAM graphs run
+        exactly one slice per sweep (the whole frontier), so the greedy
+        sequence there is unchanged; stores and over-budget graphs run
+        several, each seeing the previous slice's applied moves — a
+        different but equally valid greedy order."""
+        nonlocal comm_size, comm_deg
         # ---- gather: connection weight from each frontier node to each
         # neighboring community, via one segment-sum over (node, comm) keys
         asrc, adst, aw = _gather_arcs(g, nodes)
         if asrc.size == 0:
-            break
+            return _empty, _empty, False
         key = asrc * S + labels[adst]
         order = np.argsort(key, kind="stable")
         skey, sw = key[order], aw[order]
@@ -131,7 +158,7 @@ def _local_move(g: Graph, labels: np.ndarray, comm_size: np.ndarray,
         ucomm = ukey % S
         cv = labels[unode]
         is_cur = ucomm == cv
-        # ---- gains against the sweep-start community state
+        # ---- gains against the slice-start community state
         w_v_cv = np.zeros(n)
         w_v_cv[unode[is_cur]] = w_to[is_cur]
         dv = deg[unode]
@@ -157,7 +184,7 @@ def _local_move(g: Graph, labels: np.ndarray, comm_size: np.ndarray,
         best = best[good]
         mv_node, mv_to, mv_gain = unode[best], ucomm[best], gain[best]
         if mv_node.size == 0:
-            break
+            return _empty, _empty, False
         mv_from = labels[mv_node]
         # ---- swap guard: when moves A->B and B->A are both pending, the
         # sequential greedy would realize only one of them (whichever ran
@@ -169,10 +196,10 @@ def _local_move(g: Graph, labels: np.ndarray, comm_size: np.ndarray,
                                    mv_from[~blocked])
         mv_gain = mv_gain[~blocked]
         if mv_node.size == 0:
-            break
+            return _empty, _empty, False
         # ---- cap-aware acceptance: per target community, admit movers in
-        # gain order while the size cap holds against sweep-start sizes
-        # (departures are not credited until next sweep — conservative, so
+        # gain order while the size cap holds against slice-start sizes
+        # (departures are not credited until next slice — conservative, so
         # the cap can never overshoot).
         order2 = np.lexsort((prio[mv_node], -mv_gain, mv_to))
         t, nn, ff = mv_to[order2], mv_node[order2], mv_from[order2]
@@ -184,7 +211,7 @@ def _local_move(g: Graph, labels: np.ndarray, comm_size: np.ndarray,
         accept = comm_size[t] + (csum - before_group) <= max_size
         nn, t, ff = nn[accept], t[accept], ff[accept]
         if nn.size == 0:
-            continue
+            return _empty, _empty, True
         # ---- apply the surviving moves in one shot
         labels[nn] = t
         last_left[nn] = ff
@@ -193,15 +220,53 @@ def _local_move(g: Graph, labels: np.ndarray, comm_size: np.ndarray,
         comm_size += np.bincount(t, weights=dw, minlength=S)
         comm_deg -= np.bincount(ff, weights=dd, minlength=S)
         comm_deg += np.bincount(t, weights=dd, minlength=S)
+        return nn, t, True
+
+    for _ in range(max_sweeps):
+        nodes = np.flatnonzero(active)
+        if nodes.size == 0:
+            break
+        active[nodes] = False
+        slices = (_frontier_batches(g, nodes, _OOC_BATCH_ARCS)
+                  if sliced else [nodes])
+        moved_nodes, moved_to = [], []
+        any_candidates = False
+        for sl in slices:
+            s_nn, s_t, had = sweep_slice(sl)
+            any_candidates |= had
+            if s_nn.size:
+                moved_nodes.append(s_nn)
+                moved_to.append(s_t)
+        if not any_candidates:
+            break
+        if not moved_nodes:
+            continue
+        nn = np.concatenate(moved_nodes) if len(moved_nodes) > 1 \
+            else moved_nodes[0]
+        t = np.concatenate(moved_to) if len(moved_to) > 1 else moved_to[0]
         moved_any = True
         if nn.size * _MOVE_CUTOFF < n:
             break
         # ---- next frontier: neighbors of moved nodes that did not end up
         # in the mover's new community (the batched form of the sequential
         # re-queue rule)
-        _, mdst, _ = _gather_arcs(g, nn)
-        newlab = np.repeat(t, g.indptr[nn + 1] - g.indptr[nn])
-        active[mdst[labels[mdst] != newlab]] = True
+        if sliced:
+            # stores gather chunk-grouped: present the nodes ascending
+            # (activation flags are a set union, so order is irrelevant);
+            # slicing also bounds this gather's arc workspace
+            order = np.argsort(nn, kind="stable")
+            nn, t = nn[order], t[order]
+            batches = _frontier_batches(g, nn, _OOC_BATCH_ARCS)
+        else:
+            batches = [nn]
+        pos = 0
+        for bn in batches:
+            bt = t[pos:pos + bn.size]
+            pos += bn.size
+            _, mdst, _ = _gather_arcs(g, bn)
+            newlab = np.repeat(bt, np.asarray(g.indptr[bn + 1])
+                               - np.asarray(g.indptr[bn]))
+            active[mdst[labels[mdst] != newlab]] = True
     return moved_any
 
 

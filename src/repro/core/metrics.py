@@ -13,7 +13,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from .engine import connected_components
+from .engine import connected_components, connected_components_chunks
 from .graph import Graph
 
 
@@ -52,9 +52,61 @@ class PartitionReport:
         }
 
 
+def _evaluate_partition_chunked(g, labels: np.ndarray,
+                                k: int) -> PartitionReport:
+    """Out-of-core body of :func:`evaluate_partition`: the same counts,
+    accumulated over ``iter_csr_chunks()`` sweeps instead of one
+    whole-array ``arcs()`` pass. Peak RAM is O(n + k + halo pairs)."""
+    n = g.n
+    m_once = 0
+    cut = 0
+    edges = np.zeros(k, dtype=np.int64)
+    deg = np.zeros(n, dtype=np.int64)       # intra-partition degree
+    halo_parts: List[np.ndarray] = []
+    for ch in g.iter_csr_chunks():
+        once = ch.src < ch.dst              # count each edge once
+        s, d = ch.src[once], ch.dst[once]
+        m_once += int(s.size)
+        cut_mask = labels[s] != labels[d]
+        cut += int(cut_mask.sum())
+        si, di = s[~cut_mask], d[~cut_mask]
+        edges += np.bincount(labels[si], minlength=k).astype(np.int64)
+        deg += np.bincount(si, minlength=n) + np.bincount(di, minlength=n)
+        cs, cd = s[cut_mask], d[cut_mask]
+        hk = np.unique(np.concatenate([labels[cs] * n + cd,
+                                       labels[cd] * n + cs]))
+        if hk.size:
+            halo_parts.append(hk)
+    nodes = np.bincount(labels, minlength=k)
+    isolated = np.bincount(labels[deg == 0], minlength=k)
+
+    def intra_chunks():
+        for ch in g.iter_csr_chunks():
+            same = labels[ch.src] == labels[ch.dst]
+            yield ch.src[same], ch.dst[same]
+    comp = connected_components_chunks(n, intra_chunks)
+    _, rep = np.unique(comp, return_index=True)
+    comps = np.bincount(labels[rep], minlength=k)
+
+    node_balance = nodes.max() / (n / k)
+    edge_balance = edges.max() / (max(int(edges.sum()), 1) / k)
+    halo_keys = (np.unique(np.concatenate(halo_parts)) if halo_parts
+                 else np.zeros(0, dtype=np.int64))
+    rf = (n + halo_keys.size) / n
+    return PartitionReport(k=k, edge_cut_pct=float(100.0 * cut
+                                                   / max(m_once, 1)),
+                           components_per_part=[int(c) for c in comps],
+                           isolated_per_part=[int(i) for i in isolated],
+                           node_balance=float(node_balance),
+                           edge_balance=float(edge_balance),
+                           replication_factor=float(rf))
+
+
 def evaluate_partition(g: Graph, labels: np.ndarray) -> PartitionReport:
     labels = np.asarray(labels, dtype=np.int64)
     k = int(labels.max()) + 1
+    if getattr(g, "out_of_core", False):
+        return _evaluate_partition_chunked(g, labels, k)
     src, dst, w = g.arcs()
     once = src < dst                      # count each undirected edge once
     s, d = src[once], dst[once]

@@ -126,17 +126,24 @@ def _tensors_dict(pt: PartitionTensors) -> Dict[str, np.ndarray]:
 # ---------------------------------------------------------------------------
 # LOCAL training (the paper's scheme — zero collectives)
 # ---------------------------------------------------------------------------
-def make_local_train_step(cfg: GNNConfig, multilabel: bool, lr: float = 1e-2
-                          ) -> Callable:
+def make_local_train_step(cfg: GNNConfig, multilabel: bool, lr: float = 1e-2,
+                          per_partition: bool = False) -> Callable:
     """Returns jit-able step(params, opt, tensors, key) -> (params, opt, loss).
 
     All arrays carry a leading k axis; the step is a pure vmap — sharding the
-    k axis over `data` makes it fully local per device."""
+    k axis over `data` makes it fully local per device. With
+    ``per_partition=True`` the un-vmapped single-partition step is returned
+    instead (no leading k axis) — the low-memory sequential path trains one
+    partition at a time with it, and since local-mode partitions never
+    interact, the math per partition is the same either way."""
     def one_step(params, opt, t, key):
         loss, grads = jax.value_and_grad(_loss_one)(params, cfg, t,
                                                     multilabel, key)
         params, opt = adamw_update(grads, opt, params, lr, weight_decay=0.0)
         return params, opt, loss
+
+    if per_partition:
+        return one_step
 
     def step(params, opt, tensors, keys):
         return jax.vmap(one_step)(params, opt, tensors, keys)
@@ -147,14 +154,28 @@ def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
                 epochs: int = 60, lr: float = 1e-2, seed: int = 0,
                 mesh: Optional[Mesh] = None,
                 hlo_out: Optional[Dict[str, str]] = None,
-                integrate: str = "none"
+                integrate: str = "none", sequential: bool = False
                 ) -> Tuple[PyTree, np.ndarray]:
     """Paper's local training. Returns (params, global_embeddings [n, E]).
 
     When ``hlo_out`` is given, the optimized (post-SPMD) HLO of the train
     step is stored under ``hlo_out["hlo"]`` so callers (the pipeline report,
     the roofline benchmark) can count collective bytes — for this mode the
-    count is zero, which is the paper's claim."""
+    count is zero, which is the paper's claim.
+
+    ``sequential=True`` (the pipeline's ``low_memory`` flag, DESIGN.md §15)
+    trains the k partitions one at a time through the un-vmapped step
+    instead of all at once: the vmapped step materializes every partition's
+    ``[E_pad, F]`` edge gathers simultaneously (~k times the transient
+    footprint — ~18 GB at n=1e6, k=8, F=128 measured), the sequential loop
+    only ever one. Partitions never interact in local mode and the
+    per-epoch dropout keys are the same ``keys[p]``, so the trained
+    parameters and embeddings are identical to the vmapped path
+    (pinned in tests/test_graphstore.py). Requires an unsharded run
+    (``mesh is None``) and no ``hlo_out``."""
+    if sequential and mesh is None and hlo_out is None:
+        return _train_local_sequential(ds, batch, cfg, epochs=epochs, lr=lr,
+                                       seed=seed, integrate=integrate)
     pt = gather_partition_tensors(ds, batch)
     k = batch.k
     num_out = ds.num_classes
@@ -185,6 +206,55 @@ def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
         params, opt, loss = step(params, opt, tensors, keys)
     params, emb = apply_integration(
         params, integrate, lambda p: compute_embeddings(p, cfg, tensors), k)
+    return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
+                                   cfg.embed_dim)
+
+
+def _train_local_sequential(ds: NodeDataset, batch: PartitionBatch,
+                            cfg: GNNConfig, epochs: int, lr: float,
+                            seed: int, integrate: str
+                            ) -> Tuple[PyTree, np.ndarray]:
+    """Low-memory local training: one partition at a time (see train_local).
+
+    The epoch/partition loops are swapped relative to the vmapped path —
+    partition p runs all its epochs before p+1 starts — which is legal
+    exactly because local training has no cross-partition dataflow. Only
+    one partition's tensors are resident on device at a time; the jitted
+    single-partition step compiles once (padding makes every partition the
+    same shape)."""
+    pt = gather_partition_tensors(ds, batch)
+    k = batch.k
+    np_tensors = _tensors_dict(pt)
+    key = jax.random.PRNGKey(seed)
+    params = init_partition_models(key, cfg, ds.num_classes, k)
+    # per-epoch key schedule, identical to the vmapped path's
+    ep_keys = [jax.random.split(jax.random.fold_in(key, e), k)
+               for e in range(epochs)]
+    step1 = jax.jit(make_local_train_step(cfg, ds.multilabel, lr,
+                                          per_partition=True))
+    trained: List[PyTree] = []
+    for p in range(k):
+        t_p = {name: jnp.asarray(v[p]) for name, v in np_tensors.items()}
+        params_p = jax.tree.map(lambda x: x[p], params)
+        opt_p = adamw_init(params_p)
+        for e in range(epochs):
+            params_p, opt_p, _ = step1(params_p, opt_p, t_p, ep_keys[e][p])
+        trained.append(jax.tree.map(np.asarray, params_p))
+        del t_p, params_p, opt_p
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *trained)
+
+    fwd1 = jax.jit(lambda pp, t: _forward_one(pp, cfg, t)[0])
+
+    def emb_fn(ps):
+        out = []
+        for p in range(k):
+            t_p = {name: jnp.asarray(v[p]) for name, v in np_tensors.items()}
+            out.append(np.asarray(fwd1(jax.tree.map(lambda x: x[p], ps),
+                                       t_p)))
+            del t_p
+        return jnp.asarray(np.stack(out))
+
+    params, emb = apply_integration(params, integrate, emb_fn, k)
     return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
                                    cfg.embed_dim)
 

@@ -3,7 +3,9 @@
 GraphStorm-style regression workflows partition a graph once, persist the
 result, and share it across every downstream training run; this module gives
 the repo the same shape (DESIGN.md §1). Two artifact kinds live under one
-cache directory as content-addressed ``.npz`` bundles:
+cache directory as content-addressed bundle *directories* (``meta.json`` +
+one ``.npy`` per array, written atomically via
+:class:`~repro.core.atomic_directory`):
 
 * **labels bundle** — the raw partition assignment, keyed by
   ``(graph_hash, canonical spec, config fingerprint, k, seed)``. This is the
@@ -22,14 +24,19 @@ config, defaults included), so differently-parameterized runs of the same
 method land in distinct bundles; v1 keyed only ``(method, k, seed)`` and
 collided them.
 
-Filenames embed a human-readable prefix plus the first 16 hex chars of the
-key digest; the digest covers a format-version field, so bumping
+Bundle names embed a human-readable prefix plus the first 16 hex chars of
+the key digest; the digest covers a format-version field, so bumping
 ``ARTIFACT_VERSION`` silently invalidates stale bundles (v2: fingerprint
 keys; v3: the vectorized partitioning engine visits nodes in a different
 order than the v2 Python queue, so v2 labels are stale for identical
-fingerprints — they degrade to cache misses, never wrong hits). Writes are
-atomic (tmp file + ``os.replace``); loads validate the embedded metadata
-against the requested key and treat any mismatch as a miss.
+fingerprints; v5: monolithic compressed ``.npz`` bundles became directory
+bundles whose batch tensors load with ``mmap_mode="r"`` — each field is a
+``[k, ...]`` array whose row ``p`` is partition ``p``'s physical shard, so
+one partition's tensors page in without materializing the other ``k-1``.
+Pre-v5 ``.npz`` bundles — including v4-keyed ones — degrade to cache
+misses, never wrong hits). Writes are atomic (tmp directory +
+``os.replace``); loads validate the embedded metadata against the requested
+key and treat any mismatch as a miss.
 """
 from __future__ import annotations
 
@@ -45,8 +52,9 @@ from typing import Any, Dict, Optional, Tuple, Union
 import numpy as np
 
 from repro.core import (Graph, HaloExchangeSpec, PartitionBatch,
-                        PartitionerSpec, build_halo_exchange,
-                        build_partition_batch, partition_from_spec)
+                        PartitionerSpec, atomic_directory,
+                        build_halo_exchange, build_partition_batch,
+                        partition_from_spec)
 
 from .datasets import graph_fingerprint
 
@@ -55,7 +63,7 @@ __all__ = ["ARTIFACT_VERSION", "ArtifactBundle", "PartitionArtifactStore",
 
 log = logging.getLogger("repro.pipeline")
 
-ARTIFACT_VERSION = 3
+ARTIFACT_VERSION = 5
 
 _BATCH_FIELDS = ("node_ids", "node_mask", "owned_mask", "edge_src",
                  "edge_dst", "edge_weight", "in_degree")
@@ -135,12 +143,64 @@ class PartitionArtifactStore:
                 "seed": int(seed), "scheme": scheme}
 
     def _path(self, meta: Dict[str, Any], spec: PartitionerSpec) -> str:
+        """Bundle directory path (v5+; pre-v5 bundles were ``.npz`` files
+        whose digests keyed the old versions — they never collide with a
+        v5 path and simply age out as misses)."""
         stem = f"{meta['kind']}-{_spec_slug(spec)}-k{meta['k']}-s{meta['seed']}"
         if meta["kind"] == "batch":
             stem += f"-{meta['scheme']}"
-        return os.path.join(self.cache_dir, f"{stem}-{_digest(meta)}.npz")
+        return os.path.join(self.cache_dir, f"{stem}-{_digest(meta)}")
 
     # ----- low-level IO ----------------------------------------------------
+    @staticmethod
+    def _atomic_save_bundle(path: str, meta: Dict[str, Any],
+                            arrays: Dict[str, np.ndarray]) -> None:
+        """Write a bundle directory atomically: ``meta.json`` + one plain
+        ``.npy`` per array (mmap-loadable, unlike a compressed npz)."""
+        with atomic_directory(path) as tmp:
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f, indent=1, sort_keys=True)
+            for name, arr in arrays.items():
+                np.save(os.path.join(tmp, name + ".npy"), arr)
+
+    @staticmethod
+    def _load_bundle(path: str, meta: Dict[str, Any],
+                     required: Tuple[str, ...] = ()
+                     ) -> Optional[Dict[str, np.ndarray]]:
+        """Open a bundle directory; arrays come back memory-mapped
+        (read-only). Any mismatch/corruption degrades to a miss (None)."""
+        if not os.path.isdir(path):
+            return None
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                stored = json.load(f)
+        except (OSError, ValueError) as e:
+            log.warning("unreadable artifact %s (%r) — recomputing", path, e)
+            return None
+        if stored != meta:
+            log.warning("stale artifact %s (key mismatch) — recomputing",
+                        path)
+            return None
+        data: Dict[str, np.ndarray] = {}
+        try:
+            for name in os.listdir(path):
+                if name.endswith(".npy"):
+                    data[name[:-4]] = np.load(os.path.join(path, name),
+                                              mmap_mode="r",
+                                              allow_pickle=False)
+        except (OSError, ValueError) as e:
+            log.warning("unreadable artifact %s (%r) — recomputing", path, e)
+            return None
+        missing = [k for k in required if k not in data]
+        if missing:
+            log.warning("incomplete artifact %s (missing %s) — recomputing",
+                        path, missing)
+            return None
+        return data
+
+    # Legacy (pre-v5) npz helpers. Production code no longer writes npz
+    # bundles; these stay so the version-skew tests can forge old-format
+    # artifacts and the cache maintenance commands can list/clear them.
     @staticmethod
     def _atomic_savez(path: str, **arrays) -> None:
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
@@ -180,17 +240,16 @@ class PartitionArtifactStore:
         graph_hash = graph_hash or graph_fingerprint(g)
         meta = self._labels_meta(graph_hash, spec, k, seed)
         path = self._path(meta, spec)
-        data = self._load_npz(path, meta)
+        data = self._load_bundle(path, meta, required=("labels",))
         if data is not None:
             log.info("partition cache HIT: %s (spec=%s fp=%s k=%d seed=%d) "
                      "— skipping re-partition", path, spec.canonical(),
                      spec.fingerprint(), k, seed)
-            return data["labels"].astype(np.int64), True, path, 0.0
+            return np.asarray(data["labels"], dtype=np.int64), True, path, 0.0
         log.info("partition cache MISS: computing %s k=%d seed=%d",
                  spec.canonical(), k, seed)
         result = partition_from_spec(g, spec, k, seed)
-        self._atomic_savez(path, labels=result.labels,
-                           meta_json=np.asarray(json.dumps(meta)))
+        self._atomic_save_bundle(path, meta, {"labels": result.labels})
         log.info("partition artifact saved: %s (%.2fs)", path,
                  result.seconds)
         return result.labels, False, path, result.seconds
@@ -207,8 +266,11 @@ class PartitionArtifactStore:
         graph_hash = graph_hash or graph_fingerprint(g)
         meta = self._batch_meta(graph_hash, spec, k, seed, scheme)
         path = self._path(meta, spec)
-        data = self._load_npz(path, meta)
+        data = self._load_bundle(path, meta,
+                                 required=_BATCH_FIELDS + ("n_pad", "e_pad"))
         if data is not None:
+            # fields arrive memory-mapped: row p of each [k, ...] array is
+            # partition p's shard, paged in only when that partition trains
             batch = PartitionBatch(
                 **{f: data[f] for f in _BATCH_FIELDS},
                 n_pad=int(data["n_pad"]), e_pad=int(data["e_pad"]))
@@ -238,15 +300,14 @@ class PartitionArtifactStore:
     def _save_batch(self, path: str, meta: Dict[str, Any],
                     batch: PartitionBatch,
                     halo: Optional[HaloExchangeSpec]) -> None:
-        arrays = {f: getattr(batch, f) for f in _BATCH_FIELDS}
+        arrays = {f: np.asarray(getattr(batch, f)) for f in _BATCH_FIELDS}
         arrays["n_pad"] = np.int64(batch.n_pad)
         arrays["e_pad"] = np.int64(batch.e_pad)
         if halo is not None:
-            arrays["halo_send_rows"] = halo.send_rows
-            arrays["halo_recv_rows"] = halo.recv_rows
+            arrays["halo_send_rows"] = np.asarray(halo.send_rows)
+            arrays["halo_recv_rows"] = np.asarray(halo.recv_rows)
             arrays["halo_h_pad"] = np.int64(halo.h_pad)
-        self._atomic_savez(path, meta_json=np.asarray(json.dumps(meta)),
-                           **arrays)
+        self._atomic_save_bundle(path, meta, arrays)
 
     # ----- the one-call API ------------------------------------------------
     def load_or_compute(self, g: Graph, method: SpecLike, k: int, seed: int,
@@ -269,17 +330,27 @@ class PartitionArtifactStore:
 
     # ----- maintenance -----------------------------------------------------
     def entries(self):
-        """(filename, size_bytes) for every bundle in the cache."""
+        """(name, size_bytes) for every bundle in the cache — v5 bundle
+        directories plus any legacy pre-v5 ``.npz`` files."""
         out = []
         for name in sorted(os.listdir(self.cache_dir)):
-            if name.endswith(".npz"):
-                p = os.path.join(self.cache_dir, name)
+            p = os.path.join(self.cache_dir, name)
+            if os.path.isdir(p) and ".tmp-" not in name:
+                size = sum(os.path.getsize(os.path.join(root, f))
+                           for root, _, fnames in os.walk(p) for f in fnames)
+                out.append((name, size))
+            elif name.endswith(".npz"):
                 out.append((name, os.path.getsize(p)))
         return out
 
     def clear(self) -> int:
+        import shutil
         n = 0
         for name, _ in self.entries():
-            os.unlink(os.path.join(self.cache_dir, name))
+            p = os.path.join(self.cache_dir, name)
+            if os.path.isdir(p):
+                shutil.rmtree(p)
+            else:
+                os.unlink(p)
             n += 1
         return n

@@ -39,13 +39,22 @@ def _build_parser() -> argparse.ArgumentParser:
 
     run = sub.add_parser("run", help="run the full pipeline once")
     run.add_argument("--dataset", default="arxiv-like",
-                     help="karate | arxiv-like | proteins-like")
+                     help="karate | arxiv-like | proteins(-like) | "
+                          "arxiv-like-stream (out-of-core: generation "
+                          "streams to a chunked mmap CSR bundle on disk, "
+                          "DESIGN.md §15)")
     run.add_argument("--nodes", type=int, default=None,
                      help="node count override for synthetic datasets")
     run.add_argument("--dataset-scale", type=float, default=None,
                      help="node-count multiplier for synthetic datasets "
                           "(e.g. 12.5 on arxiv-like -> 500k nodes; the "
-                          "vectorized engine partitions it in seconds)")
+                          "vectorized engine partitions it in seconds; "
+                          "works for proteins(-like) and the streamed "
+                          "variants too)")
+    run.add_argument("--dataset-dir", default=None,
+                     help="bundle directory for streamed datasets "
+                          "(arxiv-like-stream); defaults to a deterministic "
+                          "path under the system temp dir")
     run.add_argument("--method", default="leiden_fusion",
                      help="partitioner spec, e.g. leiden_fusion | metis | "
                           "\"lpa+f(alpha=0.1)\" | "
@@ -98,6 +107,10 @@ def _build_parser() -> argparse.ArgumentParser:
     run.add_argument("--no-hlo", action="store_true",
                      help="skip lowering the train step for the "
                           "collective-bytes report (saves one compile)")
+    run.add_argument("--low-memory", action="store_true",
+                     help="local mode: train partitions one at a time "
+                          "(same math, ~1/k the transient RAM; implies "
+                          "unsharded + --no-hlo — DESIGN.md §15)")
     run.add_argument("--json", action="store_true",
                      help="print the report as JSON instead of the summary")
 
@@ -122,6 +135,8 @@ def _cmd_run(args: argparse.Namespace) -> int:
         dataset_kwargs["n"] = args.nodes
     if args.dataset_scale is not None:
         dataset_kwargs["scale"] = args.dataset_scale
+    if args.dataset_dir is not None:
+        dataset_kwargs["out_dir"] = args.dataset_dir
     cfg = PipelineConfig(
         dataset=args.dataset, method=args.method, k=args.k, seed=args.seed,
         scheme=args.scheme, mode=args.mode, sync_period=args.sync_period,
@@ -136,6 +151,7 @@ def _cmd_run(args: argparse.Namespace) -> int:
         checkpoint_dir=args.checkpoint_dir,
         serving_dir=args.serving_dir,
         collect_hlo=not args.no_hlo,
+        low_memory=args.low_memory,
         dataset_kwargs=dataset_kwargs)
     report = Pipeline(cfg).run()
     if args.json:

@@ -4,6 +4,14 @@ Every entry maps a CLI-friendly name to a factory returning a
 :class:`repro.core.NodeDataset`. Names are normalized (``-`` == ``_``), so
 ``arxiv-like`` and ``arxiv_like`` resolve to the same dataset.
 
+``arxiv_like_stream`` is the out-of-core twin of ``arxiv_like``
+(DESIGN.md §15): the same rng draws in the same order, but edges stream
+straight into a chunked :class:`~repro.core.MmapGraphStore` bundle and
+features into an on-disk ``.npy`` memmap — the full edge list and feature
+matrix never exist in RAM, so million-node graphs generate under a
+node-sized RAM budget. The resulting CSR is byte-identical to the in-RAM
+build at any scale.
+
 Also home of :func:`graph_fingerprint` — the content hash of a graph's CSR
 buffers that keys the partition artifact cache (DESIGN.md §1). Partitioning
 depends only on topology, so features/labels are deliberately excluded from
@@ -12,15 +20,18 @@ the fingerprint: regenerating features does not invalidate cached partitions.
 from __future__ import annotations
 
 import hashlib
-from typing import Callable, Dict
+import os
+import tempfile
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
-from repro.core import (Graph, NodeDataset, karate_club, make_arxiv_like,
-                        make_proteins_like)
+from repro.core import (Graph, NodeDataset, build_store_from_edge_batches,
+                        karate_club, make_arxiv_like, make_proteins_like)
+from repro.core.graphstore import DEFAULT_CHUNK_ARCS
 
 __all__ = ["DATASETS", "get_dataset", "make_karate_dataset",
-           "graph_fingerprint"]
+           "make_arxiv_like_stream", "graph_fingerprint"]
 
 
 # Zachary (1977) ground-truth factions: 0 = Mr. Hi, 1 = Officer.
@@ -49,10 +60,91 @@ def make_karate_dataset(seed: int = 0) -> NodeDataset:
                        test_mask, multilabel=False, name="karate")
 
 
+def make_arxiv_like_stream(out_dir: Optional[str] = None, n: int = 40_000,
+                           num_classes: int = 40, feature_dim: int = 128,
+                           avg_deg: float = 13.8, noise: float = 4.0,
+                           seed: int = 0, scale: float = 1.0,
+                           chunk_arcs: int = DEFAULT_CHUNK_ARCS
+                           ) -> NodeDataset:
+    """Out-of-core ``make_arxiv_like``: stream generation to disk.
+
+    Mirrors the in-RAM factory's rng consumption exactly — block sizes,
+    per-block SBM edge draws (yielded batch-by-batch into
+    :func:`~repro.core.build_store_from_edge_batches`), the
+    ``_ensure_connected`` chain draws (via ``connect_rng``), then features
+    drawn row-chunk by row-chunk into a ``(n, feature_dim)`` float32 memmap.
+    Numpy's Generator fills sample buffers sequentially, so the chunked
+    draws reproduce the one-shot draws bit-for-bit: the streamed dataset is
+    CSR- and feature-identical to ``make_arxiv_like`` with the same
+    arguments, and shares its partition-cache entries
+    (:func:`graph_fingerprint` hashes content, not backend).
+
+    Peak RAM is O(n) (indptr, labels, masks, one arc chunk) — the arc-sized
+    arrays live in ``out_dir/graph`` (a chunked mmap CSR bundle) and
+    features in ``out_dir/features.npy``.
+    """
+    n = max(int(n * scale), 1)
+    if out_dir is None:
+        out_dir = os.path.join(tempfile.gettempdir(), "repro-streamed",
+                               f"arxiv_like-n{n}-seed{seed}")
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    num_blocks = num_classes * 4
+    sizes = rng.pareto(1.5, num_blocks) + 1.0
+    sizes = np.maximum((sizes / sizes.sum() * n).astype(np.int64), 8)
+    block_of = np.repeat(np.arange(num_blocks), sizes)[:n]
+    if block_of.shape[0] < n:
+        block_of = np.concatenate(
+            [block_of, rng.integers(0, num_blocks, n - block_of.shape[0])])
+    rng.shuffle(block_of)
+    avg_deg_in, avg_deg_out = avg_deg * 0.8, avg_deg * 0.2
+
+    def edge_batches():
+        # _sbm_edges, one block per batch — same rng calls in the same order
+        for b in range(num_blocks):
+            members = np.where(block_of == b)[0]
+            nb = members.shape[0]
+            if nb < 2:
+                continue
+            m_in = int(avg_deg_in * nb / 2)
+            yield (members[rng.integers(0, nb, m_in)],
+                   members[rng.integers(0, nb, m_in)])
+        m_out = int(avg_deg_out * n / 2)
+        yield rng.integers(0, n, m_out), rng.integers(0, n, m_out)
+
+    g = build_store_from_edge_batches(
+        os.path.join(out_dir, "graph"), n, edge_batches(),
+        est_arcs=int(avg_deg * n) + 16, chunk_arcs=chunk_arcs,
+        ensure_connected=True, connect_rng=rng)
+    labels = (block_of % num_classes).astype(np.int64)
+    centers = rng.normal(0, 1, (num_blocks, feature_dim))
+    feats = np.lib.format.open_memmap(
+        os.path.join(out_dir, "features.npy"), mode="w+",
+        dtype=np.float32, shape=(n, feature_dim))
+    step = max(4_000_000 // max(feature_dim, 1), 1)
+    for r0 in range(0, n, step):
+        r1 = min(r0 + step, n)
+        feats[r0:r1] = (centers[block_of[r0:r1]]
+                        + rng.normal(0, noise, (r1 - r0, feature_dim))
+                        ).astype(np.float32)
+    feats.flush()
+    perm = rng.permutation(n)
+    tr, va = int(0.6 * n), int(0.8 * n)
+    train_mask = np.zeros(n, bool); train_mask[perm[:tr]] = True
+    val_mask = np.zeros(n, bool); val_mask[perm[tr:va]] = True
+    test_mask = np.zeros(n, bool); test_mask[perm[va:]] = True
+    return NodeDataset(g, feats, labels, num_classes, train_mask, val_mask,
+                       test_mask, multilabel=False, name="arxiv_like_stream")
+
+
 DATASETS: Dict[str, Callable[..., NodeDataset]] = {
     "karate": make_karate_dataset,
     "arxiv_like": make_arxiv_like,
+    "arxiv_like_stream": make_arxiv_like_stream,
     "proteins_like": make_proteins_like,
+    # short aliases, CLI convenience
+    "arxiv": make_arxiv_like,
+    "proteins": make_proteins_like,
 }
 
 
@@ -72,12 +164,33 @@ def graph_fingerprint(g: Graph) -> str:
 
     Hashes the CSR buffers + node/self weights; two graphs with identical
     structure produce identical partition artifacts, so they share cache
-    entries regardless of how they were constructed.
+    entries regardless of how they were constructed. An out-of-core
+    :class:`~repro.core.MmapGraphStore` is hashed by streaming the same
+    logical arrays chunk-by-chunk in the same order/dtype, so a store and
+    the in-RAM ``Graph`` with identical CSR share cache entries too.
     """
     h = hashlib.sha256()
     h.update(np.int64(g.n).tobytes())
-    for arr in (g.indptr, g.indices, g.edge_weight, g.node_weight,
-                g.self_weight):
+    # Canonicalize the two equivalent "no self-loops" spellings (zeros(0)
+    # vs zeros(n)) so backends that differ only in that convention hash
+    # identically.
+    sw = np.asarray(g.self_weight, dtype=np.float64)
+    if not sw.any():
+        sw = np.zeros(0)
+    if getattr(g, "out_of_core", False):
+        def logical(dtype: str, parts) -> None:
+            h.update(np.dtype(dtype).str.encode())
+            for a in parts:
+                h.update(np.ascontiguousarray(a).tobytes())
+        logical("int64", (np.asarray(g.indptr, dtype=np.int64),))
+        logical("int32", (ch.dst.astype(np.int32)
+                          for ch in g.iter_csr_chunks()))
+        logical("float64", (np.asarray(ch.weight, dtype=np.float64)
+                            for ch in g.iter_csr_chunks()))
+        logical("float64", (np.asarray(g.node_weight, dtype=np.float64),))
+        logical("float64", (sw,))
+        return h.hexdigest()
+    for arr in (g.indptr, g.indices, g.edge_weight, g.node_weight, sw):
         a = np.ascontiguousarray(arr)
         h.update(a.dtype.str.encode())
         h.update(a.tobytes())

@@ -73,6 +73,10 @@ class PipelineConfig:
                                         # requires the classifier stage
     collect_hlo: bool = True        # lower+compile once to count collectives
     shard_data_axis: bool = True    # local mode: shard k over the mesh
+    low_memory: bool = False        # local mode: train partitions one at a
+                                    # time (same math, ~1/k the transient
+                                    # footprint; forces unsharded + no HLO
+                                    # collection — DESIGN.md §15)
                                     # `data` axis; False forces unsharded
                                     # (sequential) execution, e.g. for
                                     # per-partition wall-time measurement
@@ -285,12 +289,16 @@ class Pipeline:
                 f"f{width}": get_config(n_pad, e_pad, width).as_dict()
                 for width in widths}
         mesh = self._resolve_mesh(bundle.batch.k)
-        hlo_out: Optional[Dict[str, str]] = {} if cfg.collect_hlo else None
+        low_memory = cfg.low_memory and cfg.mode == "local"
+        if low_memory:
+            mesh = None           # sequential path is inherently unsharded
+        hlo_out: Optional[Dict[str, str]] = (
+            {} if cfg.collect_hlo and not low_memory else None)
         if cfg.mode == "local":
             params, embeddings = train_local(
                 ds, bundle.batch, gnn_cfg, epochs=cfg.epochs, lr=cfg.lr,
                 seed=cfg.seed, mesh=mesh, hlo_out=hlo_out,
-                integrate=cfg.integrate)
+                integrate=cfg.integrate, sequential=low_memory)
         elif cfg.mode == "sync":
             params, embeddings = train_sync(
                 ds, bundle.batch, bundle.halo, gnn_cfg, mesh,

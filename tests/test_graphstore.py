@@ -1,0 +1,351 @@
+"""Out-of-core GraphStore tests (DESIGN.md §15): mmap bundle round-trip,
+chunked-engine equivalence against the in-RAM backend, manifest integrity
+hard-errors, the streamed external-memory CSR builder, and the streamed
+dataset factory's bit-for-bit equality with its in-RAM twin."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (Graph, GraphStoreError, GraphStoreIntegrityError,
+                        MmapGraphStore, atomic_directory,
+                        build_partition_batch, build_store_from_edge_batches,
+                        connected_components, connected_components_chunks,
+                        evaluate_partition, leiden_fusion, make_arxiv_like,
+                        partition_from_spec, quotient_edges, split_components,
+                        store_from_graph)
+from repro.pipeline.datasets import graph_fingerprint, make_arxiv_like_stream
+
+CHUNK = 5_000      # small enough that the test graphs span several chunks
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_arxiv_like(n=3_000, seed=3)
+
+
+@pytest.fixture(scope="module")
+def pair(ds, tmp_path_factory):
+    root = tmp_path_factory.mktemp("store") / "bundle"
+    return ds.graph, store_from_graph(ds.graph, str(root), chunk_arcs=CHUNK)
+
+
+# ---------------------------------------------------------------------------
+# bundle round-trip + protocol equivalence
+# ---------------------------------------------------------------------------
+def test_store_roundtrips_csr(pair):
+    g, s = pair
+    assert s.num_chunks > 1                      # the chunking is exercised
+    assert s.n == g.n and s.num_arcs == g.num_arcs
+    assert s.m == pytest.approx(g.m)
+    np.testing.assert_array_equal(np.asarray(s.indptr), g.indptr)
+    src, dst, w = g.arcs()
+    got_s, got_d, got_w = [], [], []
+    prev_stop = 0
+    for ch in s.iter_csr_chunks():
+        assert ch.row_start == prev_stop         # chunks tile the node range
+        prev_stop = ch.row_stop
+        assert ch.arc_stop - ch.arc_start == ch.dst.shape[0]
+        got_s.append(ch.src); got_d.append(ch.dst); got_w.append(ch.weight)
+    assert prev_stop == g.n
+    np.testing.assert_array_equal(np.concatenate(got_s), src)
+    np.testing.assert_array_equal(np.concatenate(got_d), dst)
+    np.testing.assert_array_equal(np.concatenate(got_w), w)
+    np.testing.assert_allclose(s.degrees(), g.degrees())
+
+
+def test_store_arcs_raises(pair):
+    """Whole-graph materialization must fail loudly — that is the
+    out-of-core contract."""
+    _, s = pair
+    with pytest.raises(GraphStoreError, match="iter_csr_chunks"):
+        s.arcs()
+
+
+def test_gather_arcs_matches_graph(pair):
+    g, s = pair
+    rng = np.random.default_rng(0)
+    for size in (1, 17, 400):
+        nodes = np.unique(rng.integers(0, g.n, size))
+        a = g.gather_arcs(nodes)
+        b = s.gather_arcs(nodes)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    empty = s.gather_arcs(np.zeros(0, dtype=np.int64))
+    assert all(e.size == 0 for e in empty)
+
+
+def test_quotient_edges_matches_graph(pair):
+    g, s = pair
+    labels = np.random.default_rng(1).integers(0, 7, g.n)
+    qa, qb = quotient_edges(g, labels), quotient_edges(s, labels)
+    assert qa.k == qb.k
+    np.testing.assert_array_equal(qa.src, qb.src)
+    np.testing.assert_array_equal(qa.dst, qb.dst)
+    np.testing.assert_allclose(qa.weight, qb.weight)
+    np.testing.assert_allclose(qa.intra, qb.intra)
+    np.testing.assert_allclose(qa.node_weight, qb.node_weight)
+
+
+def test_aggregate_matches_graph(pair):
+    g, s = pair
+    labels = np.random.default_rng(2).integers(0, 5, g.n)
+    ag, as_ = g.aggregate(labels), s.aggregate(labels)
+    assert isinstance(as_, Graph)                # coarsened graph is in-RAM
+    np.testing.assert_array_equal(ag.indptr, as_.indptr)
+    np.testing.assert_array_equal(ag.indices, as_.indices)
+    np.testing.assert_allclose(ag.edge_weight, as_.edge_weight)
+    np.testing.assert_allclose(ag.self_weight, as_.self_weight)
+
+
+def test_connected_components_match(pair):
+    g, s = pair
+    np.testing.assert_array_equal(g.connected_components(),
+                                  s.connected_components())
+    mask = np.random.default_rng(3).random(g.n) < 0.6
+    np.testing.assert_array_equal(g.connected_components(mask),
+                                  s.connected_components(mask))
+    assert g.num_components() == s.num_components()
+
+
+def test_connected_components_chunks_equals_array_version():
+    rng = np.random.default_rng(4)
+    n = 500
+    src = rng.integers(0, n, 800)
+    dst = rng.integers(0, n, 800)
+    want = connected_components(n, src, dst)
+    # feed the same edges in 7 chunks
+    cuts = np.linspace(0, 800, 8).astype(int)
+
+    def chunks():
+        for a, b in zip(cuts[:-1], cuts[1:]):
+            yield src[a:b], dst[a:b]
+    np.testing.assert_array_equal(
+        connected_components_chunks(n, chunks), want)
+    mask = rng.random(n) < 0.5
+    np.testing.assert_array_equal(
+        connected_components_chunks(n, chunks, mask=mask),
+        connected_components(n, src, dst, mask=mask))
+
+
+def test_split_components_matches_graph(pair):
+    g, s = pair
+    labels = np.random.default_rng(5).integers(0, 4, g.n)
+    np.testing.assert_array_equal(split_components(g, labels),
+                                  split_components(s, labels))
+
+
+# ---------------------------------------------------------------------------
+# partition -> metrics -> batch on the store
+# ---------------------------------------------------------------------------
+def test_leiden_fusion_on_store_is_valid_and_matches_quality(pair):
+    g, s = pair
+    k = 6
+    la = leiden_fusion(g, k, seed=0)
+    lb = leiden_fusion(s, k, seed=0)
+    ra = evaluate_partition(g, la)
+    rb = evaluate_partition(s, lb)
+    # the paper's guarantees hold out-of-core: connected, no isolated nodes
+    assert rb.max_components == 1 and rb.total_isolated == 0
+    # and quality is within noise of the in-RAM run on the same graph
+    assert rb.edge_cut_pct == pytest.approx(ra.edge_cut_pct, abs=2.0)
+    assert rb.node_balance == pytest.approx(ra.node_balance, abs=0.1)
+
+
+def test_evaluate_partition_matches_graph(pair):
+    g, s = pair
+    labels = leiden_fusion(g, 6, seed=0)
+    ra = evaluate_partition(g, labels).as_dict()
+    rb = evaluate_partition(s, labels).as_dict()
+    for key, val in ra.items():
+        assert rb[key] == pytest.approx(val), key
+
+
+def test_partition_from_spec_accepts_store(pair):
+    _, s = pair
+    res = partition_from_spec(s, "leiden_fusion", 4, seed=0)
+    assert res.labels.shape == (s.n,)
+    assert int(res.labels.max()) + 1 == 4
+
+
+def test_build_partition_batch_matches_graph(pair):
+    g, s = pair
+    labels = leiden_fusion(g, 4, seed=0)
+    for scheme in ("inner", "repli"):
+        ba = build_partition_batch(g, labels, scheme=scheme)
+        bb = build_partition_batch(s, labels, scheme=scheme)
+        assert ba.n_pad == bb.n_pad and ba.e_pad == bb.e_pad
+        for f in ("node_ids", "node_mask", "owned_mask", "edge_src",
+                  "edge_dst", "edge_weight", "in_degree"):
+            np.testing.assert_array_equal(getattr(ba, f), getattr(bb, f),
+                                          err_msg=f"{scheme}:{f}")
+
+
+# ---------------------------------------------------------------------------
+# manifest integrity — hard errors, never silent fallbacks
+# ---------------------------------------------------------------------------
+def _edit_manifest(root, mutate):
+    mpath = os.path.join(root, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    mutate(manifest)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+
+def test_tampered_manifest_is_a_hard_error(ds, tmp_path):
+    root = str(tmp_path / "b")
+    store_from_graph(ds.graph, root, chunk_arcs=CHUNK)
+    _edit_manifest(root, lambda m: m.__setitem__("n", m["n"] + 1))
+    with pytest.raises(GraphStoreIntegrityError, match="fingerprint"):
+        MmapGraphStore.load(root)
+
+
+def test_tampered_data_file_fails_verify(ds, tmp_path):
+    root = str(tmp_path / "b")
+    store_from_graph(ds.graph, root, chunk_arcs=CHUNK)
+    target = os.path.join(root, "chunks", "00000.weights.npy")
+    arr = np.load(target)
+    arr[0] += 1.0
+    np.save(target, arr)
+    # plain load only checks the manifest; verify=True re-hashes the files
+    MmapGraphStore.load(root)
+    with pytest.raises(GraphStoreIntegrityError, match="hash mismatch"):
+        MmapGraphStore.load(root, verify=True)
+
+
+def test_missing_chunk_file_is_an_error(ds, tmp_path):
+    root = str(tmp_path / "b")
+    store_from_graph(ds.graph, root, chunk_arcs=CHUNK)
+    os.unlink(os.path.join(root, "chunks", "00000.indices.npy"))
+    with pytest.raises(GraphStoreError, match="missing data file"):
+        MmapGraphStore.load(root)
+
+
+def test_newer_format_version_is_an_error(ds, tmp_path):
+    root = str(tmp_path / "b")
+    store_from_graph(ds.graph, root, chunk_arcs=CHUNK)
+
+    def bump(m):
+        m["version"] = 99
+        # keep the fingerprint consistent so the version check is what trips
+        from repro.core.graphstore import _fingerprint_from
+        m["fingerprint"] = _fingerprint_from(m)
+    _edit_manifest(root, bump)
+    with pytest.raises(GraphStoreError, match="newer"):
+        MmapGraphStore.load(root)
+
+
+def test_atomic_directory_discards_on_error(tmp_path):
+    final = str(tmp_path / "bundle")
+    with pytest.raises(RuntimeError, match="boom"):
+        with atomic_directory(final) as tmp:
+            with open(os.path.join(tmp, "half-written"), "w") as f:
+                f.write("x")
+            raise RuntimeError("boom")
+    assert not os.path.exists(final)
+    assert os.listdir(str(tmp_path)) == []       # temp tree cleaned up
+
+    with atomic_directory(final) as tmp:
+        with open(os.path.join(tmp, "a"), "w") as f:
+            f.write("1")
+    with atomic_directory(final) as tmp:         # replace an existing bundle
+        with open(os.path.join(tmp, "b"), "w") as f:
+            f.write("2")
+    assert os.listdir(final) == ["b"]
+
+
+# ---------------------------------------------------------------------------
+# the external-memory builder + streamed dataset factory
+# ---------------------------------------------------------------------------
+def test_build_store_from_edge_batches_matches_from_edges(tmp_path):
+    rng = np.random.default_rng(6)
+    n = 2_000
+    src = rng.integers(0, n, 6_000)
+    dst = rng.integers(0, n, 6_000)
+    g = Graph.from_edges(n, src, dst)
+
+    def batches():
+        for a in range(0, 6_000, 1_234):
+            yield src[a:a + 1_234], dst[a:a + 1_234]
+    s = build_store_from_edge_batches(
+        str(tmp_path / "b"), n, batches(), est_arcs=12_000, chunk_arcs=CHUNK,
+        ensure_connected=False)
+    np.testing.assert_array_equal(np.asarray(s.indptr), g.indptr)
+    dsts = np.concatenate([ch.dst for ch in s.iter_csr_chunks()])
+    ws = np.concatenate([ch.weight for ch in s.iter_csr_chunks()])
+    np.testing.assert_array_equal(dsts, g.indices)
+    np.testing.assert_array_equal(ws, g.edge_weight)  # dup edges summed
+
+
+def test_streamed_dataset_is_bit_identical_to_in_ram(tmp_path):
+    """The tentpole equivalence: make_arxiv_like_stream mirrors
+    make_arxiv_like's rng draws exactly, so CSR, labels, features, and masks
+    all come out bit-for-bit equal — only the storage backend differs."""
+    ram = make_arxiv_like(n=4_000, seed=5)
+    st = make_arxiv_like_stream(out_dir=str(tmp_path / "d"), n=4_000, seed=5,
+                                chunk_arcs=CHUNK)
+    g, s = ram.graph, st.graph
+    assert isinstance(s, MmapGraphStore) and s.num_chunks > 1
+    np.testing.assert_array_equal(np.asarray(s.indptr), g.indptr)
+    dsts = np.concatenate([ch.dst for ch in s.iter_csr_chunks()])
+    np.testing.assert_array_equal(dsts, g.indices)
+    np.testing.assert_array_equal(ram.labels, st.labels)
+    np.testing.assert_array_equal(ram.features, np.asarray(st.features))
+    assert isinstance(st.features, np.memmap)    # features stay on disk
+    for m in ("train_mask", "val_mask", "test_mask"):
+        np.testing.assert_array_equal(getattr(ram, m), getattr(st, m))
+
+
+def test_graph_fingerprint_is_backend_invariant(tmp_path):
+    """A store and the in-RAM Graph with the same CSR hash identically, so
+    they share partition-cache entries (DESIGN.md §15)."""
+    ram = make_arxiv_like(n=2_000, seed=5)
+    st = make_arxiv_like_stream(out_dir=str(tmp_path / "d"), n=2_000, seed=5)
+    assert graph_fingerprint(ram.graph) == graph_fingerprint(st.graph)
+    copied = store_from_graph(ram.graph, str(tmp_path / "c"),
+                              chunk_arcs=CHUNK)
+    assert graph_fingerprint(copied) == graph_fingerprint(ram.graph)
+    other = make_arxiv_like(n=2_000, seed=6)
+    assert graph_fingerprint(other.graph) != graph_fingerprint(ram.graph)
+
+
+# ---------------------------------------------------------------------------
+# low-memory sequential local training (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+def test_sequential_local_training_matches_vmap(ds):
+    """train_local(sequential=True) — the low_memory pipeline path — must
+    produce the same parameters and embeddings as the vmapped step: local
+    partitions never interact and the per-epoch dropout keys are shared, so
+    the two are the same math in a different loop order."""
+    import jax
+    from repro.gnn import GNNConfig
+    from repro.gnn.train import train_local
+
+    res = partition_from_spec(ds.graph, "leiden_fusion", 4, seed=0)
+    batch = build_partition_batch(ds.graph, res.labels, scheme="repli")
+    cfg = GNNConfig(feature_dim=ds.features.shape[1], hidden_dim=16,
+                    embed_dim=8, num_layers=2, dropout=0.3)
+    pv, ev = train_local(ds, batch, cfg, epochs=3, seed=7)
+    ps, es = train_local(ds, batch, cfg, epochs=3, seed=7, sequential=True)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b), atol=1e-6),
+        pv, ps)
+    np.testing.assert_allclose(ev, es, atol=1e-6)
+
+
+def test_pipeline_low_memory_end_to_end(ds, tmp_path):
+    """The pipeline's low_memory flag runs the whole flow (partition ->
+    sequential train -> assembly -> eval) and reports the same accuracy as
+    the vmapped run at the same seed."""
+    from repro.pipeline import Pipeline, PipelineConfig
+
+    common = dict(dataset="arxiv_like", method="leiden_fusion", k=4,
+                  mode="local", epochs=3, classifier_epochs=5, hidden_dim=16,
+                  embed_dim=8, num_layers=2, cache_dir=None,
+                  collect_hlo=False, shard_data_axis=False)
+    r_lo = Pipeline(PipelineConfig(low_memory=True, **common)).run(ds)
+    r_hi = Pipeline(PipelineConfig(**common)).run(ds)
+    assert r_lo.accuracy["test"] == pytest.approx(r_hi.accuracy["test"])

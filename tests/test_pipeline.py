@@ -149,32 +149,61 @@ def test_halo_augments_cached_batch(karate, store):
     np.testing.assert_array_equal(b.halo.send_rows, c.halo.send_rows)
 
 
-def test_artifact_version_is_3():
-    """v3 invalidates v2 labels: the vectorized partitioning engine visits
-    nodes in a different order than the v2 Python queue, so cached labels
-    from v2 are stale for identical fingerprints."""
-    assert ARTIFACT_VERSION == 3
+def test_artifact_version_is_5():
+    """v5 turns monolithic compressed npz bundles into directory bundles
+    whose batch tensors memory-map per-partition shards (DESIGN.md §15);
+    pre-v5 bundles must degrade to misses."""
+    assert ARTIFACT_VERSION == 5
 
 
 def test_v2_bundles_degrade_to_misses(karate, store):
-    """A bundle written under the v2 key must be a MISS for v3 (recompute),
+    """A bundle written under the v2 key must be a MISS today (recompute),
     never a wrong hit — even when graph/spec/k/seed all match."""
-    import repro.pipeline.artifacts as artifacts_mod
     g = karate.graph
     spec = PartitionerSpec.parse("leiden_fusion")
     ghash = graph_fingerprint(g)
-    # forge the exact bundle a v2 store would have written
+    # forge the exact bundle a v2 store would have written (npz file keyed
+    # by a version=2 meta)
     v2_meta = store._labels_meta(ghash, spec, 2, 0)
     v2_meta["version"] = 2
-    v2_path = store._path(v2_meta, spec)
+    v2_path = store._path(v2_meta, spec) + ".npz"
     bogus = np.zeros(g.n, dtype=np.int64)       # stale labels, must not leak
     store._atomic_savez(v2_path, labels=bogus,
                         meta_json=np.asarray(json.dumps(v2_meta)))
     labels, hit, path, _ = store.load_or_partition(g, spec, 2, 0)
     assert not hit                              # degraded to a miss
-    assert path != v2_path                      # v3 keys land elsewhere
+    assert path != v2_path                      # current keys land elsewhere
     assert os.path.exists(v2_path)              # v2 bundle left untouched
     assert int(labels.max()) + 1 == 2           # freshly recomputed
+
+
+def test_v4_bundles_degrade_to_misses(karate, store):
+    """The v4->v5 format skew: a monolithic npz bundle keyed version=4 must
+    be a clean MISS under the v5 store — the on-disk format changed (npz ->
+    mmap directory bundle), so old bundles can never be half-read as new
+    ones. Mirrors the v2->v3 engine-skew guarantee one format later."""
+    g = karate.graph
+    spec = PartitionerSpec.parse("leiden_fusion")
+    ghash = graph_fingerprint(g)
+    v4_meta = store._labels_meta(ghash, spec, 2, 0)
+    v4_meta["version"] = 4
+    v4_path = store._path(v4_meta, spec) + ".npz"
+    bogus = np.full(g.n, 1, dtype=np.int64)     # stale labels, must not leak
+    store._atomic_savez(v4_path, labels=bogus,
+                        meta_json=np.asarray(json.dumps(v4_meta)))
+    labels, hit, path, _ = store.load_or_partition(g, spec, 2, 0)
+    assert not hit                              # degraded to a miss
+    assert path != v4_path                      # v5 keys land elsewhere
+    assert os.path.isdir(path)                  # v5 wrote a directory bundle
+    assert os.path.exists(v4_path)              # v4 bundle left untouched
+    assert not np.array_equal(labels, bogus)    # stale labels did not leak
+    # the legacy npz still shows up in maintenance listings beside the v5
+    # bundle directories, and clear() removes both kinds
+    names = [name for name, _ in store.entries()]
+    assert os.path.basename(v4_path) in names
+    assert os.path.basename(path) in names
+    assert store.clear() == len(names)
+    assert store.entries() == []
 
 
 def test_key_separates_partitioner_config(karate, store):
@@ -209,8 +238,8 @@ def test_store_accepts_parsed_specs(karate, store):
 def test_corrupt_artifact_is_a_miss(karate, store):
     g = karate.graph
     a = store.load_or_compute(g, "random", 2, 0, "inner")
-    with open(a.labels_path, "wb") as f:
-        f.write(b"not an npz")
+    with open(os.path.join(a.labels_path, "meta.json"), "w") as f:
+        f.write("not json {")
     b = store.load_or_compute(g, "random", 2, 0, "inner")
     assert not b.labels_hit               # recomputed, not crashed
     np.testing.assert_array_equal(a.labels, b.labels)
