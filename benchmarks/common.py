@@ -4,6 +4,8 @@ from __future__ import annotations
 import functools
 import json
 import os
+import platform
+import subprocess
 import sys
 import time
 from typing import Dict, List
@@ -12,6 +14,37 @@ import numpy as np
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
 PARTITION_CACHE = os.path.join(ARTIFACTS, "partition_cache")
+
+
+@functools.lru_cache(maxsize=1)
+def provenance() -> Dict[str, str]:
+    """Environment stamp merged into every BENCH row (DESIGN.md §16): git
+    sha, platform string, jax version, and the obs trace-schema version, so
+    a trajectory point can always be traced back to the code and machine
+    that produced it. Every field degrades to ``"unknown"`` rather than
+    failing — benchmarks must run from a tarball too."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    try:
+        import jax
+        jax_version = jax.__version__
+    except ImportError:
+        jax_version = "unknown"
+    try:
+        from repro.obs import SCHEMA_VERSION
+        obs_schema = SCHEMA_VERSION
+    except ImportError:
+        obs_schema = 0
+    return {"git_sha": sha or "unknown",
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax_version": jax_version,
+            "obs_schema_version": obs_schema}
 
 
 @functools.lru_cache(maxsize=1)
@@ -37,7 +70,8 @@ def append_bench_json(path: str, rows: List[Dict]) -> None:
         except (OSError, ValueError):
             history = []
     stamp = time.time()
-    history.extend({**r, "ts": stamp} for r in rows)
+    prov = provenance()
+    history.extend({**r, "ts": stamp, "provenance": prov} for r in rows)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(history, f, indent=2)

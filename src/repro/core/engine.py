@@ -29,6 +29,8 @@ from typing import Callable, Iterable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["ArcChunk", "QuotientEdges", "quotient_edges",
            "connected_components", "connected_components_chunks",
            "split_components", "CommunityState"]
@@ -103,8 +105,17 @@ def quotient_edges(g, labels: np.ndarray,
         if sw.shape[0] != g.n:
             raise ValueError(f"self_weight has shape {sw.shape}, "
                              f"expected ({g.n},)")
+    obs.counter("engine.quotient_calls").inc()
     if getattr(g, "out_of_core", False):
-        return _quotient_edges_chunked(g, labels, k, weights, sw)
+        with obs.span("engine.quotient", k=k, n=int(g.n), chunked=True):
+            return _quotient_edges_chunked(g, labels, k, weights, sw)
+    with obs.span("engine.quotient", k=k, n=int(g.n)):
+        return _quotient_edges_in_ram(g, labels, k, weights, sw)
+
+
+def _quotient_edges_in_ram(g, labels: np.ndarray, k: int,
+                           weights: Optional[np.ndarray],
+                           sw: np.ndarray) -> QuotientEdges:
     src, dst, w = g.arcs()
     if weights is not None:
         w = np.asarray(weights, dtype=np.float64)
@@ -283,10 +294,22 @@ def split_components(g, labels: np.ndarray) -> np.ndarray:
             for ch in g.iter_csr_chunks():
                 same = labels[ch.src] == labels[ch.dst]
                 yield ch.src[same], ch.dst[same]
-        return connected_components_chunks(g.n, chunks)
-    src, dst, _ = g.arcs()
-    same = labels[src] == labels[dst]
-    return connected_components(g.n, src[same], dst[same])
+        with obs.span("engine.split_components", n=int(g.n), chunked=True):
+            return connected_components_chunks(g.n, chunks)
+    with obs.span("engine.split_components", n=int(g.n)):
+        # in-RAM: pull the arcs through the chunk protocol too (a single
+        # zero-copy chunk — same arrays arcs() returns), so chunk accounting
+        # covers both backends uniformly
+        parts = []
+        for ch in g.iter_csr_chunks():
+            same = labels[ch.src] == labels[ch.dst]
+            parts.append((ch.src[same], ch.dst[same]))
+        if len(parts) == 1:
+            src, dst = parts[0]
+        else:
+            src = np.concatenate([p[0] for p in parts])
+            dst = np.concatenate([p[1] for p in parts])
+        return connected_components(g.n, src, dst)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,8 @@ from typing import ClassVar, Iterable, Iterator, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from . import engine
 
 
@@ -122,16 +124,28 @@ class Graph:
     # ----- GraphStore protocol ---------------------------------------------
     def iter_csr_chunks(self) -> Iterator[engine.ArcChunk]:
         """One zero-copy chunk covering the whole CSR (the in-RAM backend's
-        trivial implementation of the chunk protocol)."""
+        trivial implementation of the chunk protocol).
+
+        The span wraps the ``yield``, so it times the *consumer's*
+        processing of the chunk — same shape as the mmap backend, where the
+        span additionally covers the disk read."""
         src, dst, w = self.arcs()
-        yield engine.ArcChunk(row_start=0, row_stop=self.n, arc_start=0,
-                              arc_stop=self.num_arcs, src=src, dst=dst,
-                              weight=w)
+        ch = engine.ArcChunk(row_start=0, row_stop=self.n, arc_start=0,
+                             arc_stop=self.num_arcs, src=src, dst=dst,
+                             weight=w)
+        obs.counter("graphstore.chunks").inc()
+        obs.counter("graphstore.chunk_bytes").inc(
+            int(src.nbytes + dst.nbytes + w.nbytes))
+        with obs.span("graphstore.chunk", rows=int(self.n),
+                      arcs=int(self.num_arcs), backend="ram"):
+            yield ch
 
     def gather_arcs(self, nodes: np.ndarray
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(asrc, adst, aw): the CSR slices of all given nodes concatenated,
         in the given node order, without a Python loop."""
+        obs.counter("graphstore.gather_calls").inc()
+        obs.counter("graphstore.gather_rows").inc(int(nodes.size))
         counts = self.indptr[nodes + 1] - self.indptr[nodes]
         total = int(counts.sum())
         stops = np.cumsum(counts)

@@ -53,6 +53,8 @@ from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .engine import ArcChunk, connected_components_chunks
 
 __all__ = ["STORE_FORMAT_VERSION", "GraphStoreError",
@@ -276,16 +278,26 @@ class MmapGraphStore:
     def iter_csr_chunks(self) -> Iterator[ArcChunk]:
         """Yield every chunk in row order. ``src`` is reconstructed from the
         global indptr (int64), ``dst``/``weight`` are memory-mapped views —
-        resident RAM is one chunk's worth at a time."""
+        resident RAM is one chunk's worth at a time.
+
+        Each chunk is yielded under a ``graphstore.chunk`` span covering
+        the mmap load *and* the consumer's processing of that chunk; the
+        byte counter tracks what a full sweep actually pulls through RAM."""
+        chunks_ctr = obs.counter("graphstore.chunks")
+        bytes_ctr = obs.counter("graphstore.chunk_bytes")
         for c, ((r0, r1), (a0, a1)) in enumerate(
                 zip(self.node_map, self.edge_map)):
-            idx, wgt = self._chunk_arrays(c)
-            counts = np.diff(self.indptr[r0:r1 + 1])
-            src = np.repeat(np.arange(r0, r1, dtype=np.int64), counts)
-            yield ArcChunk(row_start=r0, row_stop=r1, arc_start=a0,
-                           arc_stop=a1, src=src,
-                           dst=np.asarray(idx, dtype=np.int64),
-                           weight=np.asarray(wgt, dtype=np.float64))
+            with obs.span("graphstore.chunk", chunk=c, rows=r1 - r0,
+                          arcs=a1 - a0, backend="mmap"):
+                idx, wgt = self._chunk_arrays(c)
+                counts = np.diff(self.indptr[r0:r1 + 1])
+                src = np.repeat(np.arange(r0, r1, dtype=np.int64), counts)
+                chunks_ctr.inc()
+                bytes_ctr.inc(int(src.nbytes + idx.nbytes + wgt.nbytes))
+                yield ArcChunk(row_start=r0, row_stop=r1, arc_start=a0,
+                               arc_stop=a1, src=src,
+                               dst=np.asarray(idx, dtype=np.int64),
+                               weight=np.asarray(wgt, dtype=np.float64))
 
     def gather_arcs(self, nodes: np.ndarray
                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -294,6 +306,8 @@ class MmapGraphStore:
         frontier. Rows are grouped per chunk so each chunk file is touched
         at most once per call."""
         nodes = np.asarray(nodes, dtype=np.int64)
+        obs.counter("graphstore.gather_calls").inc()
+        obs.counter("graphstore.gather_rows").inc(int(nodes.size))
         if nodes.size == 0:
             z = np.zeros(0, dtype=np.int64)
             return z, z.copy(), np.zeros(0, dtype=np.float64)
@@ -305,6 +319,8 @@ class MmapGraphStore:
         # nodes ascending -> chunk ids non-decreasing -> contiguous runs
         run_starts = np.flatnonzero(np.r_[True, which[1:] != which[:-1]])
         run_stops = np.r_[run_starts[1:], which.size]
+        obs.counter("graphstore.gather_chunks_touched").inc(
+            int(run_starts.size))
         for lo, hi in zip(run_starts, run_stops):
             c = int(which[lo])
             sub = nodes[lo:hi]

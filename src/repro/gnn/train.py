@@ -36,12 +36,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core import NodeDataset, PartitionBatch, HaloExchangeSpec
 from repro.optim import OptState, adamw_init, adamw_update
 from .model import (GNNConfig, gnn_forward, head_logits, init_gnn, init_mlp,
                     mlp_forward, sigmoid_bce, softmax_xent)
 
 PyTree = Any
+
+
+def _finish_epoch_span(sp, loss) -> None:
+    """Tracing-enabled epoch bookkeeping: block on the dispatched step so
+    the span covers the actual device compute (JAX dispatch is async — an
+    unblocked epoch span would time only the Python enqueue), then record
+    the realized mean loss on the span and the registry gauge. Only called
+    under ``obs.enabled()`` — the ``float()`` forces a device sync the
+    disabled path must never pay."""
+    val = float(jnp.mean(jax.block_until_ready(loss)))
+    sp.set(loss=round(val, 6))
+    obs.gauge("train.loss").set(val)
 
 
 # ---------------------------------------------------------------------------
@@ -201,9 +214,17 @@ def train_local(ds: NodeDataset, batch: PartitionBatch, cfg: GNNConfig,
         hlo_out["hlo"] = compiled.as_text()
         step = compiled
 
+    epochs_ctr = obs.counter("train.epochs")
+    traced = obs.enabled()
     for e in range(epochs):
         keys = jax.random.split(jax.random.fold_in(key, e), k)
-        params, opt, loss = step(params, opt, tensors, keys)
+        if traced:
+            with obs.span("train.epoch", epoch=e, mode="local") as sp:
+                params, opt, loss = step(params, opt, tensors, keys)
+                _finish_epoch_span(sp, loss)
+        else:
+            params, opt, loss = step(params, opt, tensors, keys)
+        epochs_ctr.inc()
     params, emb = apply_integration(
         params, integrate, lambda p: compute_embeddings(p, cfg, tensors), k)
     return params, pool_embeddings(np.asarray(emb), pt, ds.graph.n,
@@ -232,13 +253,22 @@ def _train_local_sequential(ds: NodeDataset, batch: PartitionBatch,
                for e in range(epochs)]
     step1 = jax.jit(make_local_train_step(cfg, ds.multilabel, lr,
                                           per_partition=True))
+    epochs_ctr = obs.counter("train.epochs")
+    traced = obs.enabled()
     trained: List[PyTree] = []
     for p in range(k):
         t_p = {name: jnp.asarray(v[p]) for name, v in np_tensors.items()}
         params_p = jax.tree.map(lambda x: x[p], params)
         opt_p = adamw_init(params_p)
-        for e in range(epochs):
-            params_p, opt_p, _ = step1(params_p, opt_p, t_p, ep_keys[e][p])
+        with obs.span("train.partition", partition=p, epochs=epochs,
+                      mode="local_sequential") as psp:
+            loss = None
+            for e in range(epochs):
+                params_p, opt_p, loss = step1(params_p, opt_p, t_p,
+                                              ep_keys[e][p])
+                epochs_ctr.inc()
+            if traced and loss is not None:
+                _finish_epoch_span(psp, loss)
         trained.append(jax.tree.map(np.asarray, params_p))
         del t_p, params_p, opt_p
     params = jax.tree.map(lambda *xs: jnp.stack(xs), *trained)
@@ -483,9 +513,17 @@ def train_sync(ds: NodeDataset, batch: PartitionBatch,
         compiled = step.lower(params, opt, tensors, keys0).compile()
         hlo_out["hlo"] = compiled.as_text()
         step = compiled
+    epochs_ctr = obs.counter("train.epochs")
+    traced = obs.enabled()
     for e in range(epochs):
         keys = jax.random.split(jax.random.fold_in(key, e), k)
-        params, opt, loss = step(params, opt, tensors, keys)
+        if traced:
+            with obs.span("train.epoch", epoch=e, mode="sync") as sp:
+                params, opt, loss = step(params, opt, tensors, keys)
+                _finish_epoch_span(sp, loss)
+        else:
+            params, opt, loss = step(params, opt, tensors, keys)
+        epochs_ctr.inc()
 
     forward = make_sync_forward(cfg, halo)
 
@@ -668,15 +706,35 @@ def train_stale(ds: NodeDataset, batch: PartitionBatch,
             hlo_out["hlo_stale"] = compiled_fz.as_text()
             step_fz = compiled_fz
 
+    epochs_ctr = obs.counter("train.epochs")
+    exchanges_ctr = obs.counter("train.stale_exchanges")
+    traced = obs.enabled()
     caches = None
     for e in range(epochs):
         keys = jax.random.split(jax.random.fold_in(key, e), k)
-        if e in schedule:
-            params, opt, loss, caches = step_ex(params, opt, tensors, keys)
-        elif caches is None:
-            params, opt, loss = step_fz(params, opt, tensors, keys)
+        kind = ("exchange" if e in schedule
+                else "frozen" if caches is None else "stale")
+
+        def run_epoch():
+            nonlocal params, opt, caches
+            if kind == "exchange":
+                params, opt, loss, caches = step_ex(params, opt, tensors,
+                                                    keys)
+                exchanges_ctr.inc()
+            elif kind == "frozen":
+                params, opt, loss = step_fz(params, opt, tensors, keys)
+            else:
+                params, opt, loss = step_st(params, opt, tensors, keys,
+                                            caches)
+            return loss
+
+        if traced:
+            with obs.span("train.epoch", epoch=e, mode="stale",
+                          kind=kind) as sp:
+                _finish_epoch_span(sp, run_epoch())
         else:
-            params, opt, loss = step_st(params, opt, tensors, keys, caches)
+            run_epoch()
+        epochs_ctr.inc()
 
     # Embedding pass mirrors training: a live refresh when the run ever
     # exchanged (sync limit stays exact), the plain local forward otherwise

@@ -45,6 +45,8 @@ import os
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
+
 __all__ = [
     "KernelConfig", "ShapeBucket", "shape_bucket", "get_config", "autotune",
     "override", "candidate_space", "vmem_bytes", "cache_path",
@@ -352,18 +354,26 @@ def autotune(n: int, e: int, f: int, backend: Optional[str] = None,
         _seed_memo()
         hit = _memo.get((backend, bucket.key))
         if hit is not None:
+            obs.counter("autotune.cache_hits").inc()
             return hit, {}
     cands = candidate_space(bucket, backend)
     measurements: Dict[str, float] = {}
-    best, best_ms = cands[0], float("inf")
-    if len(cands) == 1:
-        best_ms = 0.0     # single candidate: nothing to measure
-    else:
-        for cfg in cands:
-            ms = _measure(cfg, bucket, repeats=repeats)
-            measurements[_cand_key(cfg)] = ms
-            if ms < best_ms:
-                best, best_ms = cfg, ms
+    with obs.span("autotune.bucket", bucket=bucket.key, backend=backend,
+                  candidates=len(cands)) as bsp:
+        best, best_ms = cands[0], float("inf")
+        if len(cands) == 1:
+            best_ms = 0.0     # single candidate: nothing to measure
+        else:
+            for cfg in cands:
+                with obs.span("autotune.candidate",
+                              candidate=_cand_key(cfg)) as csp:
+                    ms = _measure(cfg, bucket, repeats=repeats)
+                    csp.set(measured_ms=round(ms, 4))
+                obs.counter("autotune.candidates_measured").inc()
+                measurements[_cand_key(cfg)] = ms
+                if ms < best_ms:
+                    best, best_ms = cfg, ms
+        bsp.set(winner=_cand_key(best))
     _persist(backend, bucket, best, measurements)
     _memo[(backend, bucket.key)] = best
     return best, measurements

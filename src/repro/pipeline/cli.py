@@ -111,6 +111,14 @@ def _build_parser() -> argparse.ArgumentParser:
                      help="local mode: train partitions one at a time "
                           "(same math, ~1/k the transient RAM; implies "
                           "unsharded + --no-hlo — DESIGN.md §15)")
+    run.add_argument("--trace", default=None, metavar="PATH",
+                     help="enable repro.obs tracing and export a Chrome "
+                          "trace-event JSON here after the run (open in "
+                          "Perfetto; aggregate with 'python -m repro.obs "
+                          "summarize PATH' — DESIGN.md §16)")
+    run.add_argument("--jax-profile", default=None, metavar="DIR",
+                     help="start a jax.profiler session around the "
+                          "training stage, writing to DIR")
     run.add_argument("--json", action="store_true",
                      help="print the report as JSON instead of the summary")
 
@@ -129,7 +137,11 @@ def _build_parser() -> argparse.ArgumentParser:
 
 
 def _cmd_run(args: argparse.Namespace) -> int:
+    from repro import obs
+
     from .pipeline import Pipeline, PipelineConfig
+    if args.trace:
+        obs.enable()
     dataset_kwargs = {}
     if args.nodes is not None:
         dataset_kwargs["n"] = args.nodes
@@ -152,8 +164,14 @@ def _cmd_run(args: argparse.Namespace) -> int:
         serving_dir=args.serving_dir,
         collect_hlo=not args.no_hlo,
         low_memory=args.low_memory,
+        jax_profile_dir=args.jax_profile,
         dataset_kwargs=dataset_kwargs)
     report = Pipeline(cfg).run()
+    if args.trace:
+        path = obs.export_trace(args.trace)
+        print(f"trace written: {path} "
+              f"({obs.tracer().event_count()} spans) — summarize with "
+              f"'python -m repro.obs summarize {path}'", file=sys.stderr)
     if args.json:
         import json
         print(json.dumps(report.as_dict(), indent=2))

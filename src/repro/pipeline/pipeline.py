@@ -12,14 +12,24 @@ scheme), ``sync`` (the DGL-style halo-exchange baseline), or ``stale``
 (periodic halo exchange every ``sync_period`` epochs — the comm-vs-accuracy
 middle ground, DESIGN.md §12). ``integrate`` optionally parameter-averages
 (``model_avg``) or ensembles the k per-partition models before assembly.
+
+Every stage runs under a ``repro.obs`` span (``pipeline.dataset``,
+``pipeline.partition``, ``pipeline.train``, ``pipeline.classifier``, ...)
+nested in one ``pipeline.total`` root. ``PipelineReport.timings`` is a view
+over those span durations — when tracing is enabled each timing IS the
+corresponding span's duration (pinned by ``tests/test_obs.py``); when
+disabled, the same windows are measured with bare ``perf_counter`` pairs so
+the dict stays API-compatible at zero tracing cost (DESIGN.md §16).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import logging
 import time
 from typing import Any, Dict, Mapping, Optional
 
+from repro import obs
 from repro.core import (INTEGRATION_KINDS, NodeDataset, PartitionerSpec,
                         evaluate_partition)
 from repro.gnn import (GNNConfig, stale_bytes_per_epoch,
@@ -32,6 +42,25 @@ from .datasets import get_dataset
 __all__ = ["PipelineConfig", "PipelineReport", "Pipeline"]
 
 log = logging.getLogger("repro.pipeline")
+
+
+@contextlib.contextmanager
+def _stage_span(timings: Dict[str, float], key: str, name: str,
+                **attrs: Any):
+    """Time one pipeline stage into ``timings[key]``.
+
+    Tracing enabled: the timing is exactly the span's recorded duration, so
+    ``timings`` is a faithful view over the trace. Disabled: a plain
+    ``perf_counter`` pair over the identical window.
+    """
+    if obs.enabled():
+        with obs.span(name, **attrs) as sp:
+            yield sp
+        timings[key] = sp.duration
+    else:
+        t0 = time.perf_counter()
+        yield obs.span(name)     # the shared no-op span
+        timings[key] = time.perf_counter() - t0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +109,9 @@ class PipelineConfig:
                                     # `data` axis; False forces unsharded
                                     # (sequential) execution, e.g. for
                                     # per-partition wall-time measurement
+    jax_profile_dir: Optional[str] = None   # start a jax.profiler session
+                                            # around the training stage and
+                                            # write it here (DESIGN.md §16)
     dataset_kwargs: Mapping[str, Any] = dataclasses.field(
         default_factory=dict)
 
@@ -207,10 +239,8 @@ class Pipeline:
                         "running unsharded", k, data)
             return None
         return mesh
-
     # ------------------------------------------------------------------
     def run(self, ds: Optional[NodeDataset] = None) -> PipelineReport:
-        import jax
         cfg = self.config
         if cfg.mode not in ("local", "sync", "stale"):
             raise ValueError(
@@ -239,78 +269,102 @@ class Pipeline:
                      "scheme=repli (was %s)", cfg.mode, scheme)
             scheme = "repli"
         timings: Dict[str, float] = {}
-        t_all = time.time()
+        with _stage_span(timings, "total", "pipeline.total",
+                         dataset=cfg.dataset, mode=cfg.mode, k=cfg.k):
+            fields = self._run_stages(ds, spec, scheme, timings)
+        obs.sample_memory_now()
+        fields["timings"] = {k: round(v, 4) for k, v in timings.items()}
+        return PipelineReport(**fields)
+
+    # ------------------------------------------------------------------
+    def _run_stages(self, ds: Optional[NodeDataset], spec: PartitionerSpec,
+                    scheme: str, timings: Dict[str, float]) -> Dict[str, Any]:
+        import jax
+        cfg = self.config
 
         # -- stage 1: dataset ------------------------------------------
-        t0 = time.time()
-        if ds is None:
-            ds = get_dataset(cfg.dataset, **dict(cfg.dataset_kwargs))
-        timings["dataset"] = time.time() - t0
+        with _stage_span(timings, "dataset", "pipeline.dataset",
+                         dataset=cfg.dataset):
+            if ds is None:
+                ds = get_dataset(cfg.dataset, **dict(cfg.dataset_kwargs))
+        obs.sample_memory_now()
 
         # -- stage 2: partition + assembly (load-or-compute) -----------
-        t0 = time.time()
         need_halo = cfg.mode in ("sync", "stale")
-        if self.store is not None:
-            bundle = self.store.load_or_compute(
-                ds.graph, spec, cfg.k, cfg.seed, scheme,
-                with_halo=need_halo)
-        else:
-            bundle = compute_bundle(ds.graph, spec, cfg.k, cfg.seed,
-                                    scheme, with_halo=need_halo)
-        timings["partition"] = bundle.partition_seconds
-        timings["assemble"] = bundle.assemble_seconds
-        part_report = evaluate_partition(ds.graph, bundle.labels).as_dict()
-        timings["partition_stage"] = time.time() - t0
+        with _stage_span(timings, "partition_stage", "pipeline.partition",
+                         method=spec.canonical(), k=cfg.k,
+                         scheme=scheme) as psp:
+            if self.store is not None:
+                bundle = self.store.load_or_compute(
+                    ds.graph, spec, cfg.k, cfg.seed, scheme,
+                    with_halo=need_halo)
+            else:
+                bundle = compute_bundle(ds.graph, spec, cfg.k, cfg.seed,
+                                        scheme, with_halo=need_halo)
+            timings["partition"] = bundle.partition_seconds
+            timings["assemble"] = bundle.assemble_seconds
+            psp.set(cache_hit=bundle.labels_hit)
+            with obs.span("pipeline.partition_eval"):
+                part_report = evaluate_partition(
+                    ds.graph, bundle.labels).as_dict()
+        obs.sample_memory_now()
 
         # -- stage 3: per-partition GNN training -----------------------
-        t0 = time.time()
-        gnn_cfg = GNNConfig(kind=cfg.model,
-                            feature_dim=int(ds.features.shape[1]),
-                            hidden_dim=cfg.hidden_dim,
-                            embed_dim=cfg.embed_dim,
-                            num_layers=cfg.num_layers, dropout=cfg.dropout,
-                            use_kernel=cfg.use_kernel)
-        # kernel config resolution/tuning: one bucket per distinct layer
-        # input width at this run's padded partition shape (DESIGN.md §14)
-        kernel_info: Optional[Dict[str, Any]] = None
-        if cfg.use_kernel:
-            from repro.kernels.autotune import autotune as tune_bucket
-            from repro.kernels.autotune import get_config
-            n_pad, e_pad = bundle.batch.n_pad, bundle.batch.e_pad
-            widths = sorted({gnn_cfg.feature_dim, gnn_cfg.hidden_dim})
-            if cfg.kernel_autotune:
-                t_tune = time.time()
-                for width in widths:
-                    chosen, measured = tune_bucket(n_pad, e_pad, width)
-                    log.info("kernel autotune f=%d -> %s (%d candidates)",
-                             width, chosen, len(measured))
-                timings["kernel_autotune"] = time.time() - t_tune
-            kernel_info = {
-                f"f{width}": get_config(n_pad, e_pad, width).as_dict()
-                for width in widths}
-        mesh = self._resolve_mesh(bundle.batch.k)
-        low_memory = cfg.low_memory and cfg.mode == "local"
-        if low_memory:
-            mesh = None           # sequential path is inherently unsharded
-        hlo_out: Optional[Dict[str, str]] = (
-            {} if cfg.collect_hlo and not low_memory else None)
-        if cfg.mode == "local":
-            params, embeddings = train_local(
-                ds, bundle.batch, gnn_cfg, epochs=cfg.epochs, lr=cfg.lr,
-                seed=cfg.seed, mesh=mesh, hlo_out=hlo_out,
-                integrate=cfg.integrate, sequential=low_memory)
-        elif cfg.mode == "sync":
-            params, embeddings = train_sync(
-                ds, bundle.batch, bundle.halo, gnn_cfg, mesh,
-                epochs=cfg.epochs, lr=cfg.lr, seed=cfg.seed,
-                hlo_out=hlo_out, integrate=cfg.integrate)
-        else:
-            params, embeddings = train_stale(
-                ds, bundle.batch, bundle.halo, gnn_cfg, mesh,
-                epochs=cfg.epochs, lr=cfg.lr, seed=cfg.seed,
-                sync_period=cfg.sync_period, hlo_out=hlo_out,
-                integrate=cfg.integrate)
-        timings["train"] = time.time() - t0
+        with _stage_span(timings, "train", "pipeline.train", mode=cfg.mode,
+                         epochs=cfg.epochs, model=cfg.model, k=cfg.k):
+            gnn_cfg = GNNConfig(kind=cfg.model,
+                                feature_dim=int(ds.features.shape[1]),
+                                hidden_dim=cfg.hidden_dim,
+                                embed_dim=cfg.embed_dim,
+                                num_layers=cfg.num_layers,
+                                dropout=cfg.dropout,
+                                use_kernel=cfg.use_kernel)
+            # kernel config resolution/tuning: one bucket per distinct layer
+            # input width at this run's padded partition shape (DESIGN.md §14)
+            kernel_info: Optional[Dict[str, Any]] = None
+            if cfg.use_kernel:
+                from repro.kernels.autotune import autotune as tune_bucket
+                from repro.kernels.autotune import get_config
+                n_pad, e_pad = bundle.batch.n_pad, bundle.batch.e_pad
+                widths = sorted({gnn_cfg.feature_dim, gnn_cfg.hidden_dim})
+                if cfg.kernel_autotune:
+                    with _stage_span(timings, "kernel_autotune",
+                                     "pipeline.kernel_autotune",
+                                     widths=widths):
+                        for width in widths:
+                            chosen, measured = tune_bucket(n_pad, e_pad,
+                                                           width)
+                            log.info("kernel autotune f=%d -> %s "
+                                     "(%d candidates)", width, chosen,
+                                     len(measured))
+                kernel_info = {
+                    f"f{width}": get_config(n_pad, e_pad, width).as_dict()
+                    for width in widths}
+            mesh = self._resolve_mesh(bundle.batch.k)
+            low_memory = cfg.low_memory and cfg.mode == "local"
+            if low_memory:
+                mesh = None       # sequential path is inherently unsharded
+            hlo_out: Optional[Dict[str, str]] = (
+                {} if cfg.collect_hlo and not low_memory else None)
+            with obs.profiler_session(cfg.jax_profile_dir):
+                if cfg.mode == "local":
+                    params, embeddings = train_local(
+                        ds, bundle.batch, gnn_cfg, epochs=cfg.epochs,
+                        lr=cfg.lr, seed=cfg.seed, mesh=mesh,
+                        hlo_out=hlo_out, integrate=cfg.integrate,
+                        sequential=low_memory)
+                elif cfg.mode == "sync":
+                    params, embeddings = train_sync(
+                        ds, bundle.batch, bundle.halo, gnn_cfg, mesh,
+                        epochs=cfg.epochs, lr=cfg.lr, seed=cfg.seed,
+                        hlo_out=hlo_out, integrate=cfg.integrate)
+                else:
+                    params, embeddings = train_stale(
+                        ds, bundle.batch, bundle.halo, gnn_cfg, mesh,
+                        epochs=cfg.epochs, lr=cfg.lr, seed=cfg.seed,
+                        sync_period=cfg.sync_period, hlo_out=hlo_out,
+                        integrate=cfg.integrate)
+        obs.sample_memory_now()
 
         collectives: Dict[str, int] = {}
         if hlo_out:
@@ -331,6 +385,12 @@ class Pipeline:
                     sum(per_epoch) / max(cfg.epochs, 1)))
             else:
                 collectives["per_epoch_avg"] = collectives["total"]
+            # reconcile the HLO byte count with the registry: gauges carry
+            # the same numbers the report does, so a trace is self-contained
+            obs.gauge("train.collective_bytes_per_step").set(
+                collectives["total"])
+            obs.gauge("train.collective_bytes_per_epoch_avg").set(
+                collectives["per_epoch_avg"])
             log.info("train-step collectives: %d bytes/step, %d bytes/epoch "
                      "avg (mode=%s)", collectives["total"],
                      collectives["per_epoch_avg"], cfg.mode)
@@ -339,12 +399,12 @@ class Pipeline:
         accuracy: Dict[str, float] = {}
         classifier_params = None
         if cfg.classifier_epochs > 0:
-            t0 = time.time()
-            accuracy, classifier_params = train_classifier(
-                ds, embeddings, hidden=cfg.classifier_hidden,
-                epochs=cfg.classifier_epochs, seed=cfg.seed,
-                return_params=True)
-            timings["classifier"] = time.time() - t0
+            with _stage_span(timings, "classifier", "pipeline.classifier",
+                             epochs=cfg.classifier_epochs):
+                accuracy, classifier_params = train_classifier(
+                    ds, embeddings, hidden=cfg.classifier_hidden,
+                    epochs=cfg.classifier_epochs, seed=cfg.seed,
+                    return_params=True)
 
         # -- stage 5: optional checkpoint ------------------------------
         checkpoint_path = None
@@ -359,16 +419,15 @@ class Pipeline:
         if cfg.serving_dir:
             # lazy import: repro.serving imports repro.gnn/pipeline pieces
             from repro.serving.store import export_from_pipeline
-            t0 = time.time()
-            serving_path = export_from_pipeline(
-                cfg.serving_dir, ds=ds, bundle=bundle, params=params,
-                classifier=classifier_params, embeddings=embeddings)
-            timings["serving_export"] = time.time() - t0
+            with _stage_span(timings, "serving_export",
+                             "pipeline.serving_export"):
+                serving_path = export_from_pipeline(
+                    cfg.serving_dir, ds=ds, bundle=bundle, params=params,
+                    classifier=classifier_params, embeddings=embeddings)
             log.info("exported serving bundle: %s", serving_path)
 
-        timings["total"] = time.time() - t_all
         src_once = ds.graph.num_arcs // 2
-        return PipelineReport(
+        return dict(
             config={**dataclasses.asdict(cfg), "scheme": scheme,
                     "method": spec.canonical(),
                     "dataset_kwargs": dict(cfg.dataset_kwargs)},
@@ -385,7 +444,6 @@ class Pipeline:
                     "e_pad": bundle.batch.e_pad},
             collectives=collectives,
             accuracy={k: float(v) for k, v in accuracy.items()},
-            timings={k: round(v, 4) for k, v in timings.items()},
             checkpoint_path=checkpoint_path,
             partition_fingerprint=bundle.fingerprint or spec.fingerprint(),
             serving_path=serving_path,

@@ -30,6 +30,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import obs
+
 from .cache import LruNodeCache
 from .inductive import InductiveEngine
 
@@ -114,6 +116,8 @@ class CompileLog:
             book = (self.steady_compiles if self._steady
                     else self.warm_compiles)
             book[name] = book.get(name, 0) + compiled
+            phase = "steady" if self._steady else "warm"
+            obs.counter(f"serving.compiles.{phase}").inc(compiled)
         return out
 
     @property
@@ -148,6 +152,7 @@ class ContinuousBatcher:
         self.flushes = 0
         self.queries_served = 0
         self.per_shard_served: Dict[int, int] = {}
+        self.flush_reasons: Dict[str, int] = {}
 
     # ----- intake ---------------------------------------------------------
     def submit(self, node_id: int, neighbors=None,
@@ -177,14 +182,16 @@ class ContinuousBatcher:
         """Flush as long as a flush is due; the serving loop's heartbeat."""
         out: List[Answer] = []
         while self.due(now):
-            out.extend(self.flush())
+            reason = ("max_batch" if len(self._queue) >= self.max_batch
+                      else "max_wait_ms")
+            out.extend(self.flush(reason))
         return out
 
     def drain(self) -> List[Answer]:
         """Flush everything regardless of the policy (end of a replay)."""
         out: List[Answer] = []
         while self._queue:
-            out.extend(self.flush())
+            out.extend(self.flush("drain"))
         return out
 
     # ----- the micro-batch ------------------------------------------------
@@ -211,17 +218,22 @@ class ContinuousBatcher:
         self.compiles.mark_steady()
         return warmed
 
-    def flush(self) -> List[Answer]:
+    def flush(self, reason: str = "drain") -> List[Answer]:
         batch = [self._queue.popleft()
                  for _ in range(min(self.max_batch, len(self._queue)))]
         if not batch:
             return []
         self.flushes += 1
+        self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
+        obs.counter(f"serving.flush.{reason}").inc()
+        obs.histogram("serving.batch_size").record(len(batch))
         known = [q for q in batch if self.store.is_known(q.node_id)]
         unknown = [q for q in batch if not self.store.is_known(q.node_id)]
         answers: List[Answer] = []
-        answers.extend(self._flush_known(known))
-        answers.extend(self._flush_inductive(unknown))
+        with obs.span("serving.flush", reason=reason, batch=len(batch),
+                      known=len(known), unknown=len(unknown)):
+            answers.extend(self._flush_known(known))
+            answers.extend(self._flush_inductive(unknown))
         self.queries_served += len(answers)
         return answers
 
@@ -230,6 +242,7 @@ class ContinuousBatcher:
             return []
         e = self.store.embed_dim
         b_pad = bucket_of(len(queries), self.max_batch)
+        obs.counter(f"serving.bucket.classify.{b_pad}").inc()
         emb = np.zeros((b_pad, e), dtype=np.float32)
         sources: List[str] = []
         miss_pos: List[int] = []
@@ -268,6 +281,7 @@ class ContinuousBatcher:
         if not queries:
             return []
         b_pad = bucket_of(len(queries), self.max_batch)
+        obs.counter(f"serving.bucket.inductive.{b_pad}").inc()
         nb_lists = [q.neighbors if q.neighbors is not None
                     else np.zeros(0, np.int64) for q in queries]
         nb_emb, nb_mask, pids = self.inductive.prepare(nb_lists, b_pad)
@@ -298,6 +312,7 @@ class ContinuousBatcher:
     def stats(self) -> Dict[str, Any]:
         return {
             "flushes": self.flushes,
+            "flush_reasons": dict(sorted(self.flush_reasons.items())),
             "queries_served": self.queries_served,
             "max_batch": self.max_batch,
             "max_wait_ms": self.max_wait_ms,

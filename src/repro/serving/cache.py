@@ -14,6 +14,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["LruNodeCache"]
 
 
@@ -40,9 +42,11 @@ class LruNodeCache:
         row = self._d.get(key)
         if row is None:
             self.misses += 1
+            obs.counter("serving.cache.misses").inc()
             return None
         self._d.move_to_end(key)
         self.hits += 1
+        obs.counter("serving.cache.hits").inc()
         return row
 
     def put(self, node_id: int, row: np.ndarray) -> None:
@@ -53,6 +57,7 @@ class LruNodeCache:
         if len(self._d) > self.capacity:
             self._d.popitem(last=False)
             self.evictions += 1
+            obs.counter("serving.cache.evictions").inc()
 
     @property
     def hit_rate(self) -> float:

@@ -205,6 +205,9 @@ def cmd_replay(args) -> int:
         print(f"  cache        hit_rate={row['cache_hit_rate']}")
         print(f"  compiles     warm={row['warm_compiles']} "
               f"steady_state={row['steady_state_recompiles']}")
+        reasons = ", ".join(f"{k}={v}" for k, v in
+                            sorted(row["flush_reasons"].items()))
+        print(f"  flushes      {row['flushes']} ({reasons})")
         print(f"  answers      {srcs}")
         print(f"  exact-match  {row['queries'] - row['label_mismatches']}"
               f"/{row['queries']} (mismatches={row['label_mismatches']})")

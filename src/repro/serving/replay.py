@@ -110,6 +110,7 @@ def run_replay(batcher: ContinuousBatcher, workload: Workload,
         "warm_compiles": warm_compiles,
         "steady_state_recompiles": stats["steady_state_recompiles"],
         "flushes": stats["flushes"],
+        "flush_reasons": stats["flush_reasons"],
         "served_by_source": by_source,
         "per_shard_served": stats["per_shard_served"],
         "label_mismatches": len(mismatches),
